@@ -1,0 +1,71 @@
+"""Figure 3: mass concentration δ vs outlier suppression ratio, on real
+(trained-model) activations vs per-token-fitted Gaussian/Laplace samples.
+
+Claims checked: (1) suppression occurs for almost all tokens even when the
+sufficient condition δ < 1/√d fails; (2) δ correlates strongly with the
+suppression ratio; (3) fitted-distribution δ's differ from the real ones.
+"""
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core import bounds
+from repro.core.hadamard import hadamard_transform
+from repro.core.pipeline import _Capture
+from repro.models.transformer import build_model
+
+from .common import bench_model, calib_batches
+
+
+def collect_down_activations():
+    cfg, model, params, corpus = bench_model()
+    cap = _Capture()
+    cmodel = build_model(cfg, quant_hooks=cap.hooks())
+    for b in calib_batches(corpus, cfg, n=1):
+        cap.reset_forward()
+        cmodel.forward(params, b, unroll=True)
+    # third (or last) layer's down-projection input, like the paper
+    layer = min(2, cfg.n_layers - 1)
+    return cap.get("down", layer)
+
+
+def run():
+    x = jnp.asarray(collect_down_activations()[:1024])
+    d = x.shape[-1]
+    delta = np.asarray(bounds.mass_concentration(x))
+    xr = hadamard_transform(x)
+    ratio = np.asarray(bounds.suppression_ratio(x, xr))
+    corr = float(np.corrcoef(delta, ratio)[0, 1])
+    suppressed = float((ratio < 1.0).mean())
+
+    # per-token fitted Gaussian / Laplace surrogates
+    rng = np.random.default_rng(0)
+    xn = np.asarray(x)
+    mu, sd = xn.mean(-1, keepdims=True), xn.std(-1, keepdims=True)
+    bscale = np.abs(xn - np.median(xn, -1, keepdims=True)).mean(-1,
+                                                                keepdims=True)
+    gauss = rng.normal(mu, sd, xn.shape).astype(np.float32)
+    lap = rng.laplace(np.median(xn, -1, keepdims=True), bscale,
+                      xn.shape).astype(np.float32)
+    d_gauss = np.asarray(bounds.mass_concentration(jnp.asarray(gauss)))
+    d_lap = np.asarray(bounds.mass_concentration(jnp.asarray(lap)))
+    return {
+        "d": d, "suff_threshold": d ** -0.5,
+        "delta_mean": float(delta.mean()), "delta_p05": float(np.quantile(delta, .05)),
+        "ratio_mean": float(ratio.mean()), "frac_suppressed": suppressed,
+        "corr_delta_ratio": corr,
+        "delta_gauss_mean": float(d_gauss.mean()),
+        "delta_laplace_mean": float(d_lap.mean()),
+    }
+
+
+def main(argv=None):
+    r = run()
+    print("# Fig3 surrogate")
+    for k, v in r.items():
+        print(f"{k},{v}")
+    assert r["frac_suppressed"] > 0.95
+    assert r["corr_delta_ratio"] > 0.5
+
+
+if __name__ == "__main__":
+    main()

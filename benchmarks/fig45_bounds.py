@@ -1,0 +1,90 @@
+"""Figures 4 & 5: (a) normalized Prop-3.2 bound vs block size with the
+1/√b sufficient threshold and 1/b floor; (b) the bound tracks per-token
+quantization error, and MassDiff tightens it for ~100% of tokens with a
+30–45% mean error reduction (paper: 37.5–40.5%), beating ZigZag.
+"""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bounds, massdiff as MD
+from repro.core.hadamard import block_hadamard_transform
+from repro.core.quantizers import QuantSpec, quantize_act
+
+from .fig3_delta import collect_down_activations
+
+
+def quant_err(x, b):
+    xr = block_hadamard_transform(x, b)
+    xq = quantize_act(xr, QuantSpec(fmt="int4"))
+    return np.asarray(jnp.linalg.norm(xq - xr, axis=-1))
+
+
+def run(b: int = 16):
+    x = jnp.asarray(collect_down_activations()[:512])
+    d = x.shape[-1]
+    out = {"d": d}
+
+    # Fig 4: bound vs block size
+    curve = []
+    bs = [bb for bb in (4, 8, 16, 32, 64, 128, 256) if d % bb == 0 and bb <= d]
+    for bb in bs:
+        z = np.asarray(bounds.prop32_bound(x, bb)) / math.sqrt(bb)
+        linf = np.asarray(jnp.max(jnp.abs(x), -1))
+        curve.append((bb, float((z / linf).mean()), 1 / math.sqrt(bb), 1 / bb))
+    out["fig4"] = curve
+
+    # Fig 5: bound vs error, per permutation strategy
+    xn = np.asarray(x)
+    linf = np.abs(xn).max(-1)
+    base_bound = np.asarray(bounds.prop32_bound(x, b)) / math.sqrt(b) / linf
+    base_err = quant_err(x, b) / linf
+
+    def permuted(perm_method):
+        # per-token permutation, like the paper's Fig 5 protocol
+        errs, bnds, tightened = [], [], 0
+        for i in range(xn.shape[0]):
+            xi = xn[i:i + 1]
+            perm = MD.make_permutation(perm_method, xi, b)
+            xp = jnp.asarray(xi[:, perm])
+            bnd = float(bounds.prop32_bound(xp, b)[0]) / math.sqrt(b) / linf[i]
+            err = float(quant_err(xp, b)[0]) / linf[i]
+            tightened += bnd <= base_bound[i] * (1 + 1e-9)
+            errs.append(err)
+            bnds.append(bnd)
+        return (np.asarray(errs), np.asarray(bnds),
+                tightened / xn.shape[0])
+
+    md_err, md_bnd, md_tight = permuted("massdiff")
+    zz_err, zz_bnd, zz_tight = permuted("zigzag")
+    corr = float(np.corrcoef(base_bound, base_err)[0, 1])
+    out["fig5"] = {
+        "corr_bound_error": corr,
+        "massdiff_frac_bound_tightened": md_tight,
+        "zigzag_frac_bound_tightened": zz_tight,
+        "massdiff_mean_err_reduction":
+            float(1 - (md_err / np.maximum(base_err, 1e-9)).mean()),
+        "zigzag_mean_err_reduction":
+            float(1 - (zz_err / np.maximum(base_err, 1e-9)).mean()),
+    }
+    return out
+
+
+def main(argv=None):
+    r = run()
+    print("# Fig4 surrogate: b,mean_norm_bound,suff_1/sqrt(b),floor_1/b")
+    for row in r["fig4"]:
+        print(",".join(f"{v:.5f}" if isinstance(v, float) else str(v)
+                       for v in row))
+    print("# Fig5 surrogate")
+    for k, v in r["fig5"].items():
+        print(f"{k},{v:.4f}")
+    f5 = r["fig5"]
+    assert f5["massdiff_frac_bound_tightened"] >= 0.99
+    assert f5["massdiff_mean_err_reduction"] >= \
+        f5["zigzag_mean_err_reduction"] - 1e-6
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel micro-benchmarks (interpret-mode correctness cost + jnp-reference
+wall time on CPU; TPU wall-time comes from the roofline, not this host).
+
+Reports per-op bytes/FLOPs and the modeled v5e time for the block-Hadamard
+rotation and the fused rotate+quant kernel, plus the measured CPU time of
+the jnp reference (sanity anchor, not a perf claim).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(argv=None):
+    m, d, b = 2048, 8192, 32
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+
+    rot = jax.jit(lambda x: kref.block_hadamard_ref(x, b))
+    us_rot = _time(rot, x)
+    fused = jax.jit(lambda x: kref.hadamard_quant_ref(x, b))
+    us_fused = _time(fused, x)
+
+    bytes_unfused = m * d * 2 * 2 + (m * d * 2 + m * d * 1 + m * 8)
+    bytes_fused = m * d * 2 + m * d * 1 + m * 8
+    flops_rot = 2 * m * d * b
+
+    print("# kernel model (v5e bf16) + CPU jnp reference timing")
+    print("op,cpu_ref_us,model_bytes,model_flops,v5e_time_us,bound")
+    t_mem = m * d * 2 * 2 / HBM_BW * 1e6
+    t_cmp = flops_rot / PEAK * 1e6
+    print(f"block_hadamard_b{b},{us_rot:.0f},{m*d*4},{flops_rot},"
+          f"{max(t_mem,t_cmp):.1f},{'memory' if t_mem>t_cmp else 'compute'}")
+    t_mem_f = bytes_fused / HBM_BW * 1e6
+    print(f"hadamard_quant_fused_b{b},{us_fused:.0f},{bytes_fused},"
+          f"{flops_rot},{max(t_mem_f,t_cmp):.1f},memory")
+    saving = 1 - bytes_fused / bytes_unfused
+    print(f"fusion_hbm_byte_saving,{saving:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Table 1 / Table 5: WikiText2-style perplexity across block sizes,
+No-Permute vs PeRQ (MassDiff), under Qronos (Table 1) or RTN (Table 5).
+
+Paper claims reproduced (as orderings at CPU scale):
+  * PeRQ ≤ No-Permute at every block size, largest gains at small b;
+  * both approach the full-vector rotation as b → d_ff;
+  * PeRQ closes the gap at much smaller b.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import pipeline as PL
+
+from .common import bench_model, eval_ppl, quantize_and_eval
+
+
+def run(rounding: str = "qronos", block_sizes=(8, 16, 32, 64, 128, 256)):
+    cfg, model, params, corpus = bench_model()
+    fp_ppl = eval_ppl(model, params, corpus)
+    rows = [("bf16", "-", fp_ppl)]
+    for b in block_sizes:
+        full = b >= cfg.d_ff
+        for perm, label in (("identity", "no_permute"),
+                            ("massdiff", "perq")):
+            ptq = PL.PTQConfig(block_size=b, permutation=perm,
+                               rotation="quarot", rounding=rounding,
+                               full_vector_r3=full)
+            ppl = quantize_and_eval(model, params, corpus, ptq)
+            rows.append((label, b, ppl))
+    # full-vector reference (QuaRot)
+    ptq = PL.preset("quarot", rounding=rounding) if rounding != "qronos" \
+        else PL.preset("quarot")
+    rows.append(("full_vector", "-",
+                 quantize_and_eval(model, params, corpus, ptq)))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounding", default="qronos",
+                    choices=["qronos", "gptq", "rtn"])
+    args = ap.parse_args(argv)
+    rows = run(args.rounding)
+    print(f"# Table1 surrogate (rounding={args.rounding})")
+    print("method,block_size,ppl")
+    for label, b, ppl in rows:
+        print(f"{label},{b},{ppl:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Table 2: perplexity across data formats × pipeline compositions."""
+from __future__ import annotations
+
+from repro.core import pipeline as PL
+from repro.core.quantizers import QuantSpec
+
+from .common import bench_model, eval_ppl, quantize_and_eval
+
+METHODS = ["mr_rtn", "mr_gptq", "mr_qronos", "brq_spin", "perq_star",
+           "perq_dagger"]
+FORMATS = ["int4", "fp4", "mxfp4"]
+
+
+def run():
+    cfg, model, params, corpus = bench_model()
+    rows = [("bf16", "-", eval_ppl(model, params, corpus))]
+    for fmt in FORMATS:
+        for name in METHODS:
+            ptq = PL.preset(name,
+                            weight_spec=QuantSpec(fmt=fmt),
+                            act_spec=QuantSpec(fmt=fmt),
+                            cayley_steps=8)
+            ppl = quantize_and_eval(model, params, corpus, ptq, n_eval=4)
+            rows.append((name, fmt, ppl))
+    return rows
+
+
+def main(argv=None):
+    rows = run()
+    print("# Table2 surrogate")
+    print("method,format,ppl")
+    for name, fmt, ppl in rows:
+        print(f"{name},{fmt},{ppl:.3f}")
+
+
+if __name__ == "__main__":
+    main()

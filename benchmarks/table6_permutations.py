@@ -1,0 +1,30 @@
+"""Table 6: permutation strategies under a fixed PeRQ pipeline (b=32,
+Qronos): identity < random < absmax < zigzag ≤ massdiff."""
+from repro.core import pipeline as PL
+
+from .common import bench_model, eval_ppl, quantize_and_eval
+
+METHODS = ["identity", "random", "absmax", "zigzag", "massdiff"]
+
+
+def run(block_size: int = 16):
+    cfg, model, params, corpus = bench_model()
+    rows = [("bf16", eval_ppl(model, params, corpus))]
+    for perm in METHODS:
+        ptq = PL.PTQConfig(block_size=block_size, permutation=perm,
+                           rotation="quarot", rounding="qronos")
+        rows.append((perm, quantize_and_eval(model, params, corpus, ptq,
+                                             n_eval=4)))
+    return rows
+
+
+def main(argv=None):
+    rows = run()
+    print("# Table6 surrogate (b=16, qronos)")
+    print("permutation,ppl")
+    for name, ppl in rows:
+        print(f"{name},{ppl:.3f}")
+
+
+if __name__ == "__main__":
+    main()

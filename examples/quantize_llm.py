@@ -1,0 +1,78 @@
+"""End-to-end driver: TRAIN a ~small LM for a few hundred steps on the
+synthetic corpus (with checkpointing + the fault-tolerant driver), then
+post-training-quantize it with PeRQ and compare perplexities across
+pipelines — the paper's Table-1/2 protocol compressed into one script.
+
+    PYTHONPATH=src python examples/quantize_llm.py [--steps 300]
+"""
+import argparse
+import math
+import os
+import tempfile
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.core import pipeline as PL
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticCorpus, \
+    batch_iterator
+from repro.models.transformer import build_model
+from repro.optim import adamw
+from repro.runtime.driver import RuntimeConfig, TrainDriver
+from repro.train.step import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--eval-batches", type=int, default=8)
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("llama3-1b").reduced(
+        n_layers=4, d_model=128, vocab=512, n_heads=4, n_kv_heads=2,
+        head_dim=32, d_ff=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(cfg.vocab, seed=0)
+
+    # ---- train (fault-tolerant driver + checkpoints) ----
+    workdir = args.workdir or tempfile.mkdtemp(prefix="perq_example_")
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=20,
+                                total_steps=args.steps)
+    opt = adamw.init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg, TrainConfig(remat=False)))
+    mgr = CheckpointManager(os.path.join(workdir, "ckpt"), keep=2)
+    mgr.save(0, {"params": params, "opt": opt}, blocking=True)
+    driver = TrainDriver(step, mgr, RuntimeConfig(checkpoint_every=100))
+    it = Prefetcher(batch_iterator(corpus, DataConfig(cfg.vocab, 64, 16)))
+    print(f"training {args.steps} steps → {workdir}")
+    (params, opt), _ = driver.run(params, opt, it, num_steps=args.steps)
+    it.close()
+
+    # ---- evaluate fp baseline ----
+    def ppl(p, hooks=None):
+        m = build_model(cfg, quant_hooks=hooks) if hooks else model
+        ev = jax.jit(lambda pp, b: m.loss_fn(pp, b)[1]["nll"])
+        eit = batch_iterator(corpus, DataConfig(cfg.vocab, 64, 16, seed=999))
+        tot = sum(float(ev(p, next(eit))) for _ in range(args.eval_batches))
+        return math.exp(tot / args.eval_batches)
+
+    fp_ppl = ppl(params)
+    print(f"\nbf16 perplexity: {fp_ppl:.3f}")
+
+    # ---- PTQ across pipelines ----
+    cit = batch_iterator(corpus, DataConfig(cfg.vocab, 128, 8, seed=77))
+    calib = [next(cit) for _ in range(2)]
+    print(f"{'pipeline':14s} {'ppl':>9s} {'vs bf16':>9s}")
+    for name in ["rtn_only", "mr_rtn", "mr_qronos", "perq_star",
+                 "perq_dagger", "quarot"]:
+        res = PL.quantize_model(model, params, calib,
+                                PL.preset(name, cayley_steps=8))
+        q = ppl(res.params, hooks=res.hooks)
+        print(f"{name:14s} {q:9.3f} {q / fp_ppl:9.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Checkpointing: atomic, async, reshardable (elastic-restart) snapshots.
+
+Layout (one directory per step):
+    <dir>/step_000100.tmp/...   → atomic rename → <dir>/step_000100/
+        manifest.json           tree structure + shapes + dtypes
+        arrays.npz              leaf arrays (addressable data)
+
+Restart contract:
+  * `restore(dir)` returns the latest tree as numpy.
+  * `restore_sharded(dir, shardings)` device_puts every leaf with the NEW
+    sharding tree — the mesh may have a different shape than at save time
+    (elastic rescale). Resharding is exercised by the runtime tests.
+  * saves are asynchronous (background thread) with `wait()` barriers, and
+    a keep-last-k retention policy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Params = Any
+
+_SEP = "::"
+
+
+def _flatten(tree: Params) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, flat: dict[str, np.ndarray],
+               structure: str):
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "structure": structure,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)      # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def save(self, step: int, tree: Params, *, blocking: bool = False):
+        """Snapshot `tree`. Device→host copy happens synchronously (so the
+        caller may mutate afterwards); the file write is backgrounded."""
+        self.wait()
+        flat = _flatten(jax.tree.map(np.asarray, tree))
+        structure = json.dumps(jax.tree_util.tree_structure(tree),
+                               default=str)
+
+        def work():
+            try:
+                self._write(step, flat, structure)
+            except Exception as e:      # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int | None = None,
+                target: Params | None = None) -> Params:
+        """Load a checkpoint. With `target` (a tree of like-structured
+        arrays/ShapeDtypeStructs) the stored leaves are mapped back into
+        that structure; otherwise a flat {path: array} dict is returned."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        if target is None:
+            return flat
+        tflat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = []
+        for path, leaf in tflat:
+            key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            if key not in flat:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = flat[key]
+            want_shape = tuple(leaf.shape)
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {want_shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_sharded(self, target: Params, shardings: Params,
+                        step: int | None = None) -> Params:
+        """Restore and place with NEW shardings (elastic restart across a
+        different mesh shape)."""
+        host = self.restore(step, target=target)
+        return jax.tree.map(
+            lambda a, s: jax.device_put(a, s), host, shardings)

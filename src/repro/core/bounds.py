@@ -1,0 +1,114 @@
+"""Executable forms of the paper's theoretical analysis (Section 3).
+
+These are used three ways:
+  1. property tests (the bounds must hold for arbitrary inputs — hypothesis),
+  2. the Figure 3/4/5 benchmark harnesses,
+  3. MassDiff diagnostics (the Prop-3.2 bound is the optimization target).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = [
+    "mass_concentration",
+    "energy_concentration",
+    "block_mass_concentration",
+    "prop31_bound",
+    "prop32_bound",
+    "zeta",
+    "cor33_rhs",
+    "prop34_bound",
+    "suppression_ratio",
+    "sufficient_threshold_full",
+    "sufficient_threshold_block",
+]
+
+
+def _blocks(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    d = x.shape[-1]
+    if d % b:
+        raise ValueError(f"d={d} not divisible by b={b}")
+    return x.reshape(*x.shape[:-1], d // b, b)
+
+
+def mass_concentration(x: jnp.ndarray) -> jnp.ndarray:
+    """δ = ‖X‖₁ / (d·‖X‖∞) ∈ [1/d, 1] over the last axis."""
+    d = x.shape[-1]
+    l1 = jnp.sum(jnp.abs(x), axis=-1)
+    linf = jnp.max(jnp.abs(x), axis=-1)
+    return l1 / (d * jnp.maximum(linf, jnp.finfo(jnp.float32).tiny))
+
+
+def energy_concentration(x: jnp.ndarray) -> jnp.ndarray:
+    """δ' = ‖X‖₂ / (√d·‖X‖∞) ∈ [1/√d, 1] (Remark D.1)."""
+    d = x.shape[-1]
+    l2 = jnp.linalg.norm(x, axis=-1)
+    linf = jnp.max(jnp.abs(x), axis=-1)
+    return l2 / (math.sqrt(d) * jnp.maximum(linf, jnp.finfo(jnp.float32).tiny))
+
+
+def block_mass_concentration(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """δ_{j} per block: [..., n]."""
+    g = _blocks(x, b)
+    l1 = jnp.sum(jnp.abs(g), axis=-1)
+    linf = jnp.max(jnp.abs(g), axis=-1)
+    return l1 / (b * jnp.maximum(linf, jnp.finfo(jnp.float32).tiny))
+
+
+def prop31_bound(x: jnp.ndarray) -> jnp.ndarray:
+    """Prop 3.1 RHS: δ·√d·‖X‖∞ = ‖X‖₁/√d."""
+    d = x.shape[-1]
+    return jnp.sum(jnp.abs(x), axis=-1) / math.sqrt(d)
+
+
+def prop32_bound(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Prop 3.2 RHS: max_j δ_{j}·√b·‖X_{j}‖∞ = max_j ‖X_{j}‖₁/√b."""
+    g = _blocks(x, b)
+    return jnp.max(jnp.sum(jnp.abs(g), axis=-1), axis=-1) / math.sqrt(b)
+
+
+def zeta(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Z(b; X) of Corollary 3.3 (identical to the Prop-3.2 RHS)."""
+    return prop32_bound(x, b)
+
+
+def cor33_rhs(x: jnp.ndarray, b_small: int, k: int) -> jnp.ndarray:
+    """√k · Z(b'; X) — Corollary 3.3 guarantees Z(k·b'; X) ≤ this."""
+    return math.sqrt(k) * zeta(x, b_small)
+
+
+def prop34_bound(x: jnp.ndarray, b: int, eps: float,
+                 *, tight: bool = True) -> jnp.ndarray:
+    """Prop 3.4 RHS at confidence 1−ε.
+
+    tight=True uses the per-block energy form from the proof
+    (√(2/b·log(2d/ε)·max_j ‖X_{j}‖₂²)); tight=False uses the looser
+    main-text form with ‖X‖₂².
+    """
+    d = x.shape[-1]
+    c = 2.0 / b * math.log(2.0 * d / eps)
+    if tight:
+        g = _blocks(x, b)
+        e = jnp.max(jnp.sum(g * g, axis=-1), axis=-1)
+    else:
+        e = jnp.sum(x * x, axis=-1)
+    return jnp.sqrt(c * e)
+
+
+def suppression_ratio(x: jnp.ndarray, xr: jnp.ndarray) -> jnp.ndarray:
+    """‖XR‖∞ / ‖X‖∞ (< 1 ⇔ outliers suppressed)."""
+    num = jnp.max(jnp.abs(xr), axis=-1)
+    den = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), jnp.finfo(jnp.float32).tiny)
+    return num / den
+
+
+def sufficient_threshold_full(d: int) -> float:
+    """δ < 1/√d guarantees suppression for full-vector rotations."""
+    return 1.0 / math.sqrt(d)
+
+
+def sufficient_threshold_block(b: int) -> float:
+    """max_j δ_{j}‖X_{j}‖∞/‖X‖∞ < 1/√b guarantees suppression (block)."""
+    return 1.0 / math.sqrt(b)

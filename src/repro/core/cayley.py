@@ -1,0 +1,68 @@
+"""Learned rotations via the Cayley transform (SpinQuant-style, for PeRQ†).
+
+SpinQuant optimizes orthogonal R₁/R₂ with Cayley SGD on the Stiefel manifold.
+We use the equivalent skew parametrization: R(A) = (I − A)(I + A)⁻¹ · R₀ with
+A skew-symmetric and R₀ a Hadamard initialization; plain Adam on the free
+entries of A keeps R exactly orthogonal at every step. Gradients flow through
+the quantizers with the straight-through estimator (Bengio et al. 2013),
+matching Appendix B ("Cayley SGD after both weights and activations have been
+quantized using STE").
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cayley", "skew", "learn_rotation"]
+
+
+def skew(a_free: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Build a skew-symmetric matrix from d(d−1)/2 free parameters."""
+    iu = jnp.triu_indices(d, k=1)
+    A = jnp.zeros((d, d), a_free.dtype).at[iu].set(a_free)
+    return A - A.T
+
+
+def cayley(a: jnp.ndarray) -> jnp.ndarray:
+    """Cayley transform: (I − A)(I + A)⁻¹, orthogonal for skew A."""
+    d = a.shape[0]
+    eye = jnp.eye(d, dtype=a.dtype)
+    return jax.scipy.linalg.solve(eye + a, (eye - a).T, assume_a="gen").T
+
+
+def learn_rotation(loss_fn: Callable[[jnp.ndarray], jnp.ndarray], d: int,
+                   *, r0: jnp.ndarray | None = None, steps: int = 100,
+                   lr: float = 1e-2, beta1: float = 0.9, beta2: float = 0.999,
+                   eps: float = 1e-8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Minimize loss_fn(R) over orthogonal R = cayley(skew(a))·R₀ with Adam.
+
+    Returns (R_opt, loss_history[steps]).
+    """
+    if r0 is None:
+        r0 = jnp.eye(d, dtype=jnp.float32)
+    n_free = d * (d - 1) // 2
+    a0 = jnp.zeros((n_free,), jnp.float32)
+
+    def full_loss(a_free):
+        r = cayley(skew(a_free, d)) @ r0
+        return loss_fn(r)
+
+    grad_fn = jax.jit(jax.value_and_grad(full_loss))
+
+    def step(carry, _):
+        a, m, v, t = carry
+        loss, g = grad_fn(a)
+        t = t + 1
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * g * g
+        mhat = m / (1 - beta1 ** t)
+        vhat = v / (1 - beta2 ** t)
+        a = a - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return (a, m, v, t), loss
+
+    init = (a0, jnp.zeros_like(a0), jnp.zeros_like(a0), jnp.asarray(0, jnp.float32))
+    (a, _, _, _), hist = jax.lax.scan(step, init, None, length=steps)
+    r = cayley(skew(a, d)) @ r0
+    return r, hist

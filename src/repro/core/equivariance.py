@@ -1,0 +1,117 @@
+"""Permutation-equivariant region merging (Def 4.1 / Remark 4.2) and
+rotation merging (QuaRot-style R₁/R₂), at the weight-matrix level.
+
+The model-tree walkers that apply these to whole networks live in
+`repro.core.pipeline`; everything here is pure linear algebra on individual
+weights so it can be property-tested in isolation.
+
+Weight convention: ``y = x @ W + b`` with ``W: [d_in, d_out]``.
+
+A permutation ``perm`` follows the `massdiff` convention:
+``permuted_x = x[..., perm]`` ⇔ ``x @ P`` with ``P = I[:, perm]``.
+To make a *producer* emit permuted features: ``W ← W[:, perm]`` (and b[perm]).
+To make a *consumer* accept permuted features: ``W ← W[perm, :]``.
+Then (x W₁)[...,perm] @ W₂[perm,:] == x W₁ W₂ — the graph is unchanged.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "permute_producer",
+    "permute_consumer",
+    "merge_perm_into_ffn",
+    "rotate_producer",
+    "rotate_consumer",
+    "merge_head_rotation",
+    "fold_rmsnorm",
+    "center_matrix",
+    "fold_layernorm_center",
+]
+
+
+# -- permutations -----------------------------------------------------------
+
+def permute_producer(w: jnp.ndarray, perm, bias: jnp.ndarray | None = None):
+    """Producer emits permuted features: W[:, perm] (+ b[perm])."""
+    perm = jnp.asarray(perm)
+    wp = w[..., perm]
+    bp = bias[..., perm] if bias is not None else None
+    return (wp, bp) if bias is not None else wp
+
+
+def permute_consumer(w: jnp.ndarray, perm):
+    """Consumer accepts permuted features: W[perm, :]."""
+    perm = jnp.asarray(perm)
+    return jnp.take(w, perm, axis=-2)
+
+
+def merge_perm_into_ffn(w_gate, w_up, w_down, perm,
+                        b_gate=None, b_up=None):
+    """Fig. 6: permute the FFN hidden dim. Swish/⊙ are elementwise so the
+    region Φ(x) = swish(xW_g)⊙(xW_u) is permutation-equivariant; P merges
+    into W_g, W_u (producers) and W_d (consumer)."""
+    w_gate = permute_producer(w_gate, perm)
+    w_up = permute_producer(w_up, perm)
+    w_down = permute_consumer(w_down, perm)
+    out = [w_gate, w_up, w_down]
+    if b_gate is not None:
+        out.append(b_gate[..., jnp.asarray(perm)])
+    if b_up is not None:
+        out.append(b_up[..., jnp.asarray(perm)])
+    return tuple(out)
+
+
+# -- rotations --------------------------------------------------------------
+
+def rotate_producer(w: jnp.ndarray, r: jnp.ndarray,
+                    bias: jnp.ndarray | None = None):
+    """Producer emits rotated features: W ← W @ R (+ b ← b @ R)."""
+    wr = w @ r
+    if bias is not None:
+        return wr, bias @ r
+    return wr
+
+
+def rotate_consumer(w: jnp.ndarray, r: jnp.ndarray):
+    """Consumer accepts rotated features: W ← Rᵀ @ W (orthogonal R)."""
+    return r.T @ w
+
+
+def merge_head_rotation(w_v: jnp.ndarray, w_o: jnp.ndarray, r: jnp.ndarray,
+                        n_kv_heads: int, n_q_heads: int):
+    """R₂ (per-head rotation between V and O projections).
+
+    w_v: [d, n_kv_heads·h], w_o: [n_q_heads·h, d], r: [h, h]. Each head's
+    value slice is rotated on output; each head's o-proj slice on input.
+    GQA: query-head groups share a rotated KV head, so rotating every
+    q-head's o-slice by the same R is consistent.
+    """
+    h = r.shape[0]
+    d, _ = w_v.shape
+    v = w_v.reshape(d, n_kv_heads, h) @ r
+    o = jnp.einsum("hk,qkd->qhd", r.T, w_o.reshape(n_q_heads, h, -1))
+    return v.reshape(w_v.shape), o.reshape(w_o.shape)
+
+
+# -- norm folding -----------------------------------------------------------
+
+def fold_rmsnorm(gamma: jnp.ndarray, consumers: list[jnp.ndarray]):
+    """Fold the RMSNorm scale into the consuming projections:
+    (x·γ) @ W == x @ (diag(γ)W). Returns (ones_like(γ), new_consumers)."""
+    new = [gamma[:, None] * w for w in consumers]
+    return jnp.ones_like(gamma), new
+
+
+def center_matrix(d: int) -> np.ndarray:
+    """M = I − 11ᵀ/d. LN(x) == RMSNorm(x @ M)·γ + β, so folding M into every
+    producer of the residual stream converts LayerNorm to RMSNorm (QuaRot)."""
+    return np.eye(d, dtype=np.float32) - np.full((d, d), 1.0 / d, np.float32)
+
+
+def fold_layernorm_center(w_producer: jnp.ndarray) -> jnp.ndarray:
+    """Apply the centering fold to a residual-stream producer: W ← W @ M.
+    Implemented as a rank-1 update (no d×d matmul)."""
+    mean = jnp.mean(w_producer, axis=-1, keepdims=True)
+    return w_producer - mean

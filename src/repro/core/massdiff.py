@@ -1,0 +1,185 @@
+"""Permutation calibration: MassDiff (Algorithm 1) and baselines.
+
+MassDiff greedily assigns coordinates (in descending average-magnitude order)
+to the block whose running average ℓ₁ mass is smallest, equalizing the
+expected per-block ℓ₁ norms — the quantity that governs the Prop-3.2 bound.
+
+Baselines reproduced for Table 6: identity, random, absmax (descending sort),
+and ZigZag (Lin et al. 2024a — serpentine round-robin assignment).
+
+Conventions
+-----------
+A permutation is an index array ``perm`` of shape [d] such that the permuted
+vector is ``x[..., perm]`` — i.e. output coordinate i reads input coordinate
+``perm[i]``. Block j then owns output coordinates [j·b, (j+1)·b).
+The matching permutation matrix is ``P = I[:, perm]`` so ``x @ P == x[..., perm]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "coordinate_mass",
+    "massdiff",
+    "massdiff_jax",
+    "zigzag",
+    "absmax",
+    "random_permutation",
+    "identity",
+    "perm_matrix",
+    "invert",
+    "block_l1_norms",
+    "make_permutation",
+]
+
+
+def coordinate_mass(calib: np.ndarray | jnp.ndarray) -> np.ndarray:
+    """Average magnitude per coordinate over a calibration set.
+
+    `calib` is [num_tokens, d] (tokens pooled over the calibration sequences);
+    returns μ_i = (1/m)·Σ_k |X_i^{(k)}|, the per-coordinate mean mass. Because
+    per-block ℓ₁ norms are additive in coordinates, Algorithm 1's expected
+    max-block objective depends on the calibration data only through μ.
+    """
+    a = np.asarray(calib, dtype=np.float64)
+    if a.ndim == 1:
+        a = a[None, :]
+    return np.mean(np.abs(a), axis=0)
+
+
+def massdiff(mass: np.ndarray, block_size: int) -> np.ndarray:
+    """Algorithm 1 (MassDiff): greedy mass diffusion.
+
+    Sort coordinates by descending mean mass; assign each to the non-full
+    block with the smallest running mass (LPT-style makespan balancing).
+    Returns the permutation index array (see module docstring convention).
+    """
+    mass = np.asarray(mass, dtype=np.float64)
+    d = mass.shape[0]
+    if d % block_size:
+        raise ValueError(f"d={d} not divisible by b={block_size}")
+    n = d // block_size
+    order = np.argsort(-mass, kind="stable")
+    sums = np.zeros(n)
+    members: list[list[int]] = [[] for _ in range(n)]
+    open_sums = sums.copy()
+    for i in order:
+        j = int(np.argmin(open_sums))
+        members[j].append(int(i))
+        sums[j] += mass[i]
+        open_sums[j] = sums[j]
+        if len(members[j]) == block_size:
+            open_sums[j] = np.inf
+    perm = np.concatenate([np.asarray(m, dtype=np.int64) for m in members])
+    return perm
+
+
+def massdiff_jax(mass: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """jit-compatible MassDiff (lax.fori_loop) for large d on-device.
+
+    Functionally identical to `massdiff` (up to argmin tie-breaking, which is
+    `first index` in both).
+    """
+    d = mass.shape[0]
+    n = d // block_size
+    order = jnp.argsort(-mass, stable=True)
+
+    def body(step, state):
+        sums, counts, block_of = state
+        i = order[step]
+        eligible = counts < block_size
+        j = jnp.argmin(jnp.where(eligible, sums, jnp.inf))
+        sums = sums.at[j].add(mass[i])
+        counts = counts.at[j].add(1)
+        block_of = block_of.at[i].set(j)
+        return sums, counts, block_of
+
+    sums = jnp.zeros((n,), jnp.float32)
+    counts = jnp.zeros((n,), jnp.int32)
+    block_of = jnp.zeros((d,), jnp.int32)
+    _, _, block_of = jax.lax.fori_loop(0, d, body, (sums, counts, block_of))
+    # Coordinates sorted by (block, descending mass) → concatenated blocks.
+    # Stable sort on block id over the descending-mass order reproduces the
+    # per-block insertion order of the greedy loop.
+    perm = order[jnp.argsort(block_of[order], stable=True)]
+    return perm
+
+
+def zigzag(mass: np.ndarray, block_size: int) -> np.ndarray:
+    """ZigZag (Lin et al. 2024a): descending sort, serpentine round-robin.
+
+    Coordinate ranks 0..d-1 are dealt across blocks 0,1,..,n-1,n-1,..,1,0,0,..
+    so each block receives one coordinate per half-sweep.
+    """
+    mass = np.asarray(mass, dtype=np.float64)
+    d = mass.shape[0]
+    n = d // block_size
+    order = np.argsort(-mass, kind="stable")
+    fwd = np.arange(n)
+    pattern = np.concatenate([fwd, fwd[::-1]])
+    blocks = np.tile(pattern, d // (2 * n) + 1)[:d]
+    members: list[list[int]] = [[] for _ in range(n)]
+    for rank, i in enumerate(order):
+        members[blocks[rank]].append(int(i))
+    perm = np.concatenate([np.asarray(m, dtype=np.int64) for m in members])
+    return perm
+
+
+def absmax(calib: np.ndarray, block_size: int) -> np.ndarray:
+    """Absmax baseline: descending order of max |x| over the calibration set,
+    chunked into contiguous blocks."""
+    a = np.asarray(calib)
+    if a.ndim == 1:
+        a = a[None, :]
+    m = np.max(np.abs(a), axis=0)
+    return np.argsort(-m, kind="stable").astype(np.int64)
+
+
+def random_permutation(d: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(d).astype(np.int64)
+
+
+def identity(d: int) -> np.ndarray:
+    return np.arange(d, dtype=np.int64)
+
+
+def perm_matrix(perm: np.ndarray) -> np.ndarray:
+    """P such that x @ P == x[..., perm] (columns are unit vectors e_{perm[i]})."""
+    d = len(perm)
+    P = np.zeros((d, d), dtype=np.float32)
+    P[np.asarray(perm), np.arange(d)] = 1.0
+    return P
+
+
+def invert(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(np.asarray(perm))
+    inv[np.asarray(perm)] = np.arange(len(perm))
+    return inv
+
+
+def block_l1_norms(x: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Per-block ℓ₁ norms over the last axis: [..., n]."""
+    d = x.shape[-1]
+    g = x.reshape(*x.shape[:-1], d // block_size, block_size)
+    return jnp.sum(jnp.abs(g), axis=-1)
+
+
+def make_permutation(method: str, calib: np.ndarray, block_size: int,
+                     *, seed: int = 0) -> np.ndarray:
+    """Dispatch: method ∈ {massdiff, zigzag, absmax, random, identity}."""
+    calib = np.asarray(calib)
+    d = calib.shape[-1]
+    if method == "identity":
+        return identity(d)
+    if method == "random":
+        return random_permutation(d, seed)
+    if method == "absmax":
+        return absmax(calib, block_size)
+    mass = coordinate_mass(calib)
+    if method == "massdiff":
+        return massdiff(mass, block_size)
+    if method == "zigzag":
+        return zigzag(mass, block_size)
+    raise ValueError(f"unknown permutation method {method!r}")

@@ -1,0 +1,581 @@
+"""PeRQ end-to-end PTQ pipeline (Figure 2 / Figure 7 of the paper).
+
+Order of operations (all function-preserving until rounding):
+  1. fold       — absorb norm scales into adjacent projections (and keep
+                  the graph numerically identical), per family.
+  2. calibrate  — capture projection-input activations per layer on the
+                  folded model (so Hessians live in the runtime space).
+  3. rotate     — merge R₁ (stream) and R₂ (per-head) per Remark 4.2;
+                  R₁ is a full-vector Hadamard (QuaRot), a Cayley-learned
+                  rotation (SpinQuant), or a block Hadamard (MR-GPTQ/BRQ).
+  4. permute    — calibrate P₃ with MassDiff (Alg. 1) on the R̃₃-site
+                  activations and merge it into the surrounding weights.
+  5. round      — RTN / GPTQ / Qronos per projection with Hessians from the
+                  transformed (and quantized) activations (Appendix B).
+Runtime hooks: dynamic per-token activation quant on every projection input
++ the online block-Hadamard at R̃₃ — the only op left online.
+
+Pipeline compositions (Table 2):
+    perq_star    MassDiff + QuaRot R₁/R₂ + block R̃₃ + Qronos
+    perq_dagger  MassDiff + SpinQuant(Cayley) R₁ + block R̃₃ + RTN
+    mr_rtn/gptq/qronos   identity P + merged block R₁/R₂ + block R̃₃
+    brq_spin     identity P + learned block R₁ + block R̃₃ + GPTQ
+    quarot       identity P + full-vector rotations + Qronos (R̃₃ = full)
+
+Family scope (DESIGN.md §Arch-applicability): dense/vlm/moe get the full
+graph; encoder (LayerNorm stream) gets R̃₃+P₃ only; SSM gets R₁ on the
+stream + R̃₃ at out_proj with head-preserving MassDiff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model, build_model
+from . import massdiff as MD
+from . import rounding as RD
+from .cayley import learn_rotation
+from .equivariance import merge_head_rotation, permute_consumer, \
+    permute_producer
+from .hadamard import (block_hadamard_matrix, block_hadamard_transform,
+                       constructible, hadamard, hadamard_transform)
+from .quantizers import QuantSpec, quantize_act
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class PTQConfig:
+    weight_spec: QuantSpec = QuantSpec(fmt="int4")
+    act_spec: QuantSpec = QuantSpec(fmt="int4")
+    block_size: int = 32                 # b of the online R̃₃
+    full_vector_r3: bool = False         # QuaRot reference (R̃₃ = full)
+    permutation: str = "massdiff"        # identity|random|absmax|zigzag|massdiff
+    rotation: str = "quarot"             # quarot|spinquant|mr|mr_learned|none
+    rounding: str = "qronos"             # rtn|gptq|qronos
+    cayley_steps: int = 24
+    cayley_lr: float = 5e-3
+    seed: int = 0
+
+
+PRESETS: dict[str, PTQConfig] = {
+    "perq_star": PTQConfig(permutation="massdiff", rotation="quarot",
+                           rounding="qronos"),
+    "perq_dagger": PTQConfig(permutation="massdiff", rotation="spinquant",
+                             rounding="rtn"),
+    "mr_rtn": PTQConfig(permutation="identity", rotation="mr",
+                        rounding="rtn"),
+    "mr_gptq": PTQConfig(permutation="identity", rotation="mr",
+                         rounding="gptq"),
+    "mr_qronos": PTQConfig(permutation="identity", rotation="mr",
+                           rounding="qronos"),
+    "brq_spin": PTQConfig(permutation="identity", rotation="mr_learned",
+                          rounding="gptq"),
+    "quarot": PTQConfig(permutation="identity", rotation="quarot",
+                        rounding="qronos", full_vector_r3=True),
+    "rtn_only": PTQConfig(permutation="identity", rotation="none",
+                          rounding="rtn"),
+}
+
+
+def preset(name: str, **overrides) -> PTQConfig:
+    return dataclasses.replace(PRESETS[name], **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Calibration capture
+# ---------------------------------------------------------------------------
+
+class _Capture:
+    """Records projection inputs by (tag, occurrence-within-forward)."""
+
+    def __init__(self):
+        self.data: dict[tuple[str, int], list[np.ndarray]] = defaultdict(list)
+        self._count: dict[str, int] = defaultdict(int)
+
+    def reset_forward(self):
+        self._count = defaultdict(int)
+
+    def _record(self, x, tag: str, keep_dims: int = 1):
+        occ = self._count[tag]
+        self._count[tag] += 1
+        arr = np.asarray(x.astype(jnp.float32))
+        if keep_dims == 1:
+            arr = arr.reshape(-1, arr.shape[-1])
+        self.data[(tag, occ)].append(arr)
+
+    def hooks(self) -> dict:
+        cap = self
+
+        def act_in(x, tag):
+            cap._record(x, tag)
+            return x
+
+        def down_proj_fn(h, w):
+            cap._record(h, "down")
+            return h @ w
+
+        def moe_down_proj_fn(h, w):
+            cap._record(h, "moe_down", keep_dims=3)  # [B, E, C, f]
+            return jnp.einsum("becf,efd->becd", h, w)
+
+        def ssm_out_proj_fn(y, w):
+            cap._record(y, "ssm_out")
+            return y @ w
+
+        return {"act_in": act_in, "down_proj_fn": down_proj_fn,
+                "moe_down_proj_fn": moe_down_proj_fn,
+                "ssm_out_proj_fn": ssm_out_proj_fn}
+
+    def get(self, tag: str, occ: int) -> np.ndarray:
+        return np.concatenate(self.data[(tag, occ)], axis=0)
+
+    def get_all(self, tag: str) -> np.ndarray:
+        """Concatenate every occurrence (hybrid shared-block calibration)."""
+        occs = sorted(o for (t, o) in self.data if t == tag)
+        return np.concatenate([self.get(tag, o) for o in occs], axis=0)
+
+    def has(self, tag: str, occ: int = 0) -> bool:
+        return (tag, occ) in self.data
+
+
+# ---------------------------------------------------------------------------
+# Rotation / permutation helpers
+# ---------------------------------------------------------------------------
+
+def _stream_rotation(d: int, kind: str, b: int, key) -> np.ndarray | None:
+    if kind == "none":
+        return None
+    if kind in ("quarot", "spinquant"):
+        if constructible(d):
+            return np.asarray(hadamard(d), np.float32) / math.sqrt(d)
+        from .hadamard import random_orthogonal
+        return np.asarray(random_orthogonal(d, key))
+    if kind in ("mr", "mr_learned"):
+        return np.asarray(block_hadamard_matrix(d, min(b, d)), np.float32)
+    raise ValueError(kind)
+
+
+def _learn_stream_rotation(r0: np.ndarray, xs: list[np.ndarray],
+                           ws: list[np.ndarray], cfg: PTQConfig,
+                           block: bool) -> np.ndarray:
+    """SpinQuant/BRQ-Spin: Cayley-optimize the stream rotation to minimize
+    Σ‖Q_a(xR)(RᵀW) − xW‖² with STE through the quantizers."""
+    d = r0.shape[0]
+    xs_j = [jnp.asarray(x[: min(len(x), 512)]) for x in xs]
+    ws_j = [jnp.asarray(np.asarray(w, np.float32)) for w in ws]
+
+    if block:
+        b = min(cfg.block_size, d)
+        n = d // b
+        r0_small = jnp.asarray(np.asarray(hadamard(b), np.float32)
+                               / math.sqrt(b))
+
+        def bapply(x, r_small):
+            y = x.reshape(*x.shape[:-1], n, b)
+            y = jnp.einsum("...nb,bc->...nc", y, r_small)
+            return y.reshape(x.shape)
+
+        def loss_small(r_small):
+            total = 0.0
+            for x, w in zip(xs_j, ws_j):
+                xq = quantize_act(bapply(x, r_small), cfg.act_spec)
+                wr = bapply(w.T, r_small).T
+                total = total + jnp.mean((xq @ wr - x @ w) ** 2)
+            return total
+
+        r_small, _ = learn_rotation(loss_small, b, r0=r0_small,
+                                    steps=cfg.cayley_steps, lr=cfg.cayley_lr)
+        return np.kron(np.eye(n, dtype=np.float32), np.asarray(r_small))
+
+    def loss(r):
+        total = 0.0
+        for x, w in zip(xs_j, ws_j):
+            xq = quantize_act(x @ r, cfg.act_spec)
+            total = total + jnp.mean((xq @ (r.T @ w) - x @ w) ** 2)
+        return total
+
+    r, _ = learn_rotation(loss, d, r0=jnp.asarray(r0),
+                          steps=cfg.cayley_steps, lr=cfg.cayley_lr)
+    return np.asarray(r)
+
+
+def _ffn_permutation(h_cal: np.ndarray, cfg: PTQConfig, *, d: int,
+                     head_dim: int | None = None) -> np.ndarray:
+    b = cfg.block_size
+    if cfg.full_vector_r3 or b >= d or cfg.permutation == "identity":
+        return MD.identity(d)
+    if head_dim is None:
+        return MD.make_permutation(cfg.permutation, h_cal, b, seed=cfg.seed)
+    if b > head_dim or head_dim % b:
+        return MD.identity(d)
+    perm = np.arange(d, dtype=np.int64)
+    for h0 in range(0, d, head_dim):
+        sub = MD.make_permutation(cfg.permutation,
+                                  h_cal[:, h0:h0 + head_dim], b,
+                                  seed=cfg.seed)
+        perm[h0:h0 + head_dim] = h0 + sub
+    return perm
+
+
+def _r3_matrix(d: int, cfg: PTQConfig) -> np.ndarray:
+    if cfg.full_vector_r3 or cfg.block_size >= d:
+        if constructible(d):
+            return np.asarray(hadamard(d), np.float32) / math.sqrt(d)
+        return np.eye(d, dtype=np.float32)
+    return np.asarray(block_hadamard_matrix(d, cfg.block_size), np.float32)
+
+
+def _apply_r3_online(h: jnp.ndarray, cfg: PTQConfig) -> jnp.ndarray:
+    d = h.shape[-1]
+    if cfg.full_vector_r3 or cfg.block_size >= d:
+        return hadamard_transform(h) if constructible(d) else h
+    return block_hadamard_transform(h, cfg.block_size)
+
+
+def _round_weight(w: np.ndarray, x_fp: np.ndarray | None, cfg: PTQConfig
+                  ) -> np.ndarray:
+    """Round W [d_in, d_out] given its (transformed) fp input activations."""
+    wj = jnp.asarray(np.asarray(w, np.float32))
+    if cfg.rounding == "rtn" or x_fp is None or len(x_fp) < 4:
+        return np.asarray(RD.rtn(wj, cfg.weight_spec))
+    x = jnp.asarray(np.asarray(x_fp, np.float32))
+    xq = quantize_act(x, cfg.act_spec) if cfg.act_spec.enabled else x
+    hq = RD.hessian_from_activations(xq)
+    if cfg.rounding == "gptq":
+        return np.asarray(RD.gptq(wj, hq, cfg.weight_spec))
+    if cfg.rounding == "qronos":
+        c = RD.cross_from_activations(xq, x)
+        return np.asarray(RD.qronos(wj, hq, cfg.weight_spec, c_qx=c))
+    raise ValueError(cfg.rounding)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PTQResult:
+    params: Params
+    hooks: dict
+    config: PTQConfig
+    report: dict
+
+
+def quantize_model(model: Model, params: Params,
+                   calib_batches: list[Params], cfg: PTQConfig) -> PTQResult:
+    cfg_a = model.cfg
+    fam = cfg_a.family
+    d = cfg_a.d_model
+    n_layers = cfg_a.n_layers
+    key = jax.random.PRNGKey(cfg.seed)
+    report: dict[str, Any] = {"per_layer": []}
+
+    P = jax.tree.map(lambda a: np.array(a, np.float32), params)
+    L = P["layers"]
+    A = L.get("attn")          # stacked attention weights [L, ...]
+    F = L.get("ffn")           # stacked dense-FFN weights
+    MOE = L.get("moe")
+    SSM = L.get("ssm")
+    SH = P.get("shared_attn")  # hybrid shared block {attn, ffn, norms}
+
+    # ---- 1. fold norm scales (function-preserving) -------------------------
+    rmsnorm_stream = cfg_a.norm == "rmsnorm"
+    if rmsnorm_stream:
+        for i in range(n_layers):
+            if fam in ("ssm", "hybrid"):
+                g = L["norm"]["scale"][i]
+                SSM["in_proj"][i] = g[:, None] * SSM["in_proj"][i]
+                L["norm"]["scale"][i] = np.ones_like(g)
+            else:
+                g = L["attn_norm"]["scale"][i]
+                for w in ("wq", "wk", "wv"):
+                    A[w][i] = g[:, None] * A[w][i]
+                L["attn_norm"]["scale"][i] = np.ones_like(g)
+                g = L["ffn_norm"]["scale"][i]
+                if cfg_a.uses_moe:
+                    MOE["router"][i] = g[:, None] * MOE["router"][i]
+                    for w in ("w_gate", "w_up"):
+                        MOE[w][i] = g[None, :, None] * MOE[w][i]
+                    if "shared_gate" in MOE:
+                        for w in ("shared_gate", "shared_up"):
+                            MOE[w][i] = g[:, None] * MOE[w][i]
+                else:
+                    for w in (("w_gate", "w_up") if "w_gate" in F
+                              else ("w_up",)):
+                        F[w][i] = g[:, None] * F[w][i]
+                L["ffn_norm"]["scale"][i] = np.ones_like(g)
+        if fam == "hybrid":
+            g = SH["attn_norm"]["scale"]
+            for w in ("wq", "wk", "wv"):
+                SH["attn"][w] = g[:, None] * SH["attn"][w]
+            SH["attn_norm"]["scale"] = np.ones_like(g)
+            g = SH["ffn_norm"]["scale"]
+            for w in ("w_gate", "w_up"):
+                SH["ffn"][w] = g[:, None] * SH["ffn"][w]
+            SH["ffn_norm"]["scale"] = np.ones_like(g)
+        g = P["final_norm"]["scale"]
+        P["lm_head"] = g[:, None] * P["lm_head"]
+        P["final_norm"]["scale"] = np.ones_like(g)
+
+    # ---- 2. calibrate on the folded model ----------------------------------
+    cap = _Capture()
+    cap_model = build_model(cfg_a, quant_hooks=cap.hooks())
+    folded = jax.tree.map(lambda a: jnp.asarray(a, model.pdt), P)
+    for batch in calib_batches:
+        cap.reset_forward()
+        cap_model.forward(folded, batch, unroll=True)
+
+    # ---- 3. stream rotation R1 + per-head R2 -------------------------------
+    use_stream_rot = cfg.rotation != "none" and rmsnorm_stream
+    r1 = _stream_rotation(d, cfg.rotation, cfg.block_size, key) \
+        if use_stream_rot else None
+
+    if r1 is not None and cfg.rotation in ("spinquant", "mr_learned"):
+        if fam in ("ssm", "hybrid"):
+            tag, wsrc = "ssm_in", SSM["in_proj"]
+        else:
+            tag, wsrc = "qkv", A["wq"]
+        xs, ws = [], []
+        for i in range(min(n_layers, 4)):
+            if cap.has(tag, i):
+                xs.append(cap.get(tag, i))
+                ws.append(wsrc[i])
+        if xs:
+            r1 = _learn_stream_rotation(
+                r1, xs, ws, cfg, block=(cfg.rotation == "mr_learned"))
+    report["r1"] = None if r1 is None else cfg.rotation
+
+    dh = cfg_a.head_dim
+    r2 = None
+    if r1 is not None and cfg_a.n_heads and constructible(dh):
+        r2 = np.asarray(hadamard(dh), np.float32) / math.sqrt(dh)
+
+    def rotate_attn(tgt):
+        """tgt: dict view of one attention block's weights."""
+        for w in ("wq", "wk", "wv"):
+            tgt[w] = r1.T @ tgt[w]
+        tgt["wo"] = tgt["wo"] @ r1
+        if r2 is not None:
+            wv, wo = merge_head_rotation(
+                jnp.asarray(tgt["wv"]), jnp.asarray(tgt["wo"]),
+                jnp.asarray(r2), cfg_a.n_kv_heads, cfg_a.n_heads)
+            tgt["wv"], tgt["wo"] = np.asarray(wv), np.asarray(wo)
+            if "bv" in tgt:
+                bv = tgt["bv"].reshape(cfg_a.n_kv_heads, dh)
+                tgt["bv"] = np.asarray(bv @ r2).reshape(-1)
+
+    if r1 is not None:
+        for i in range(n_layers):
+            if fam in ("ssm", "hybrid"):
+                SSM["in_proj"][i] = r1.T @ SSM["in_proj"][i]
+                SSM["out_proj"][i] = SSM["out_proj"][i] @ r1
+            else:
+                view = {w: A[w][i] for w in ("wq", "wk", "wv", "wo")}
+                if "bv" in A:
+                    view["bv"] = A["bv"][i]
+                rotate_attn(view)
+                for w, v in view.items():
+                    A[w][i] = v
+                if cfg_a.uses_moe:
+                    MOE["router"][i] = r1.T @ MOE["router"][i]
+                    for w in ("w_gate", "w_up"):
+                        # rotate the d axis of [E, d, f]: R1ᵀ W_e per expert
+                        MOE[w][i] = np.einsum("ad,edf->eaf", r1.T, MOE[w][i])
+                    MOE["w_down"][i] = np.einsum("efd,dc->efc",
+                                                 MOE["w_down"][i], r1)
+                    if "shared_gate" in MOE:
+                        for w in ("shared_gate", "shared_up"):
+                            MOE[w][i] = r1.T @ MOE[w][i]
+                        MOE["shared_down"][i] = MOE["shared_down"][i] @ r1
+                else:
+                    for w in (("w_gate", "w_up") if "w_gate" in F
+                              else ("w_up",)):
+                        F[w][i] = r1.T @ F[w][i]
+                    F["w_down"][i] = F["w_down"][i] @ r1
+        if fam == "hybrid":
+            view = dict(SH["attn"])
+            rotate_attn(view)
+            SH["attn"].update(view)
+            for w in ("w_gate", "w_up"):
+                SH["ffn"][w] = r1.T @ SH["ffn"][w]
+            SH["ffn"]["w_down"] = SH["ffn"]["w_down"] @ r1
+        if "embed" in P:
+            P["embed"] = P["embed"] @ r1
+        if "frontend_proj" in P:
+            P["frontend_proj"] = P["frontend_proj"] @ r1
+        P["lm_head"] = r1.T @ P["lm_head"]
+
+    # transformed-activation helpers (captures are post-fold, pre-rotation)
+    def tx(x):
+        return x if r1 is None else x @ r1
+
+    def tx_wo(x):
+        if r2 is None:
+            return x
+        xx = x.reshape(len(x), -1, dh)
+        return (xx @ r2).reshape(x.shape)
+
+    # ---- 4+5. permutation merge + rounding ---------------------------------
+    def do_attn(tgt, x_qkv, x_wo):
+        for w in ("wq", "wk", "wv"):
+            tgt[w] = _round_weight(tgt[w], tx(x_qkv), cfg)
+        tgt["wo"] = _round_weight(tgt["wo"], tx_wo(x_wo), cfg)
+
+    def do_ffn(tgt, x_ffn, h_down, has_gate=True):
+        dff = tgt["w_down"].shape[0]
+        perm = _ffn_permutation(h_down, cfg, d=dff)
+        r3 = _r3_matrix(dff, cfg)
+        if has_gate:
+            tgt["w_gate"] = np.asarray(
+                permute_producer(jnp.asarray(tgt["w_gate"]), perm))
+        tgt["w_up"] = np.asarray(
+            permute_producer(jnp.asarray(tgt["w_up"]), perm))
+        tgt["w_down"] = r3.T @ np.asarray(
+            permute_consumer(jnp.asarray(tgt["w_down"]), perm))
+        x_t = tx(x_ffn)
+        if has_gate:
+            tgt["w_gate"] = _round_weight(tgt["w_gate"], x_t, cfg)
+        tgt["w_up"] = _round_weight(tgt["w_up"], x_t, cfg)
+        h_t = h_down[:, perm] @ r3
+        tgt["w_down"] = _round_weight(tgt["w_down"], h_t, cfg)
+        mb = min(cfg.block_size, dff)
+        mass = np.abs(h_down).mean(0)
+        report["per_layer"].append({
+            "max_block_l1_before": float(mass.reshape(-1, mb).sum(-1).max()),
+            "max_block_l1_after": float(
+                mass[perm].reshape(-1, mb).sum(-1).max()),
+        })
+        return perm
+
+    if fam in ("dense", "vlm", "encoder"):
+        has_gate = "w_gate" in F
+        for i in range(n_layers):
+            view = {w: A[w][i] for w in ("wq", "wk", "wv", "wo")}
+            do_attn(view, cap.get("qkv", i), cap.get("wo", i))
+            for w, v in view.items():
+                A[w][i] = v
+            fview = {w: F[w][i]
+                     for w in (("w_gate", "w_up", "w_down") if has_gate
+                               else ("w_up", "w_down"))}
+            do_ffn(fview, cap.get("ffn", i), cap.get("down", i),
+                   has_gate=has_gate)
+            for w, v in fview.items():
+                F[w][i] = v
+    elif fam == "moe":
+        e = cfg_a.n_experts
+        for i in range(n_layers):
+            view = {w: A[w][i] for w in ("wq", "wk", "wv", "wo")}
+            do_attn(view, cap.get("qkv", i), cap.get("wo", i))
+            for w, v in view.items():
+                A[w][i] = v
+            x_ffn = cap.get("ffn", i)
+            h_all = cap.get("moe_down", i)          # [N, E, C, f]
+            x_exp = cap.get("expert_in", i).reshape(
+                h_all.shape[0], e, -1, d)            # [N, E, C, d]
+            for ex in range(e):
+                h_e = h_all[:, ex].reshape(-1, h_all.shape[-1])
+                live = np.abs(h_e).sum(-1) > 0
+                h_live = h_e[live] if live.any() else h_e
+                x_live = tx(x_exp[:, ex].reshape(-1, d)[live]) \
+                    if live.any() else None
+                ev = {"w_gate": MOE["w_gate"][i, ex],
+                      "w_up": MOE["w_up"][i, ex],
+                      "w_down": MOE["w_down"][i, ex]}
+                do_ffn(ev, x_live if x_live is not None
+                       else np.zeros((2, d), np.float32), h_live)
+                MOE["w_gate"][i, ex] = ev["w_gate"]
+                MOE["w_up"][i, ex] = ev["w_up"]
+                MOE["w_down"][i, ex] = ev["w_down"]
+            if "shared_gate" in MOE:
+                # captured at the shared expert's down projection ("down"
+                # tag: only the shared path uses that hook in MoE layers)
+                sh_h = cap.get("down", i)
+                sv = {"w_gate": MOE["shared_gate"][i],
+                      "w_up": MOE["shared_up"][i],
+                      "w_down": MOE["shared_down"][i]}
+                do_ffn(sv, x_ffn, sh_h)
+                MOE["shared_gate"][i] = sv["w_gate"]
+                MOE["shared_up"][i] = sv["w_up"]
+                MOE["shared_down"][i] = sv["w_down"]
+    elif fam in ("ssm", "hybrid"):
+        for i in range(n_layers):
+            x_in = tx(cap.get("ssm_in", i))
+            SSM["in_proj"][i] = _round_weight(SSM["in_proj"][i], x_in, cfg)
+            y = cap.get("ssm_out", i)
+            d_inner = y.shape[-1]
+            perm = _ffn_permutation(y, cfg, d=d_inner,
+                                    head_dim=cfg_a.ssm_head_dim)
+            r3 = _r3_matrix(d_inner, cfg)
+            _permute_ssm_channels(P, i, perm, cfg_a)
+            wd = r3.T @ SSM["out_proj"][i][perm, :]
+            y_t = y[:, perm] @ r3
+            SSM["out_proj"][i] = _round_weight(wd, y_t, cfg)
+            mb = min(cfg.block_size, d_inner)
+            mass = np.abs(y).mean(0)
+            report["per_layer"].append({
+                "max_block_l1_before": float(
+                    mass.reshape(-1, mb).sum(-1).max()),
+                "max_block_l1_after": float(
+                    mass[perm].reshape(-1, mb).sum(-1).max())})
+        if fam == "hybrid":
+            view = dict(SH["attn"])
+            do_attn(view, cap.get_all("qkv"), cap.get_all("wo"))
+            SH["attn"].update(view)
+            fview = dict(SH["ffn"])
+            do_ffn(fview, cap.get_all("ffn"), cap.get_all("down"))
+            SH["ffn"].update(fview)
+
+    # ---- runtime hooks ------------------------------------------------------
+    act_spec = cfg.act_spec
+
+    def act_in(x, tag):
+        return quantize_act(x, act_spec)
+
+    def down_proj_fn(h, w):
+        return quantize_act(_apply_r3_online(h, cfg), act_spec) @ w
+
+    def moe_down_proj_fn(h, w):
+        hq = quantize_act(_apply_r3_online(h, cfg), act_spec)
+        return jnp.einsum("becf,efd->becd", hq, w)
+
+    def ssm_out_proj_fn(y, w):
+        return quantize_act(_apply_r3_online(y, cfg), act_spec) @ w
+
+    hooks = {"act_in": act_in, "down_proj_fn": down_proj_fn,
+             "moe_down_proj_fn": moe_down_proj_fn,
+             "ssm_out_proj_fn": ssm_out_proj_fn}
+
+    qparams = jax.tree.map(lambda a: jnp.asarray(a, model.pdt), P)
+    return PTQResult(params=qparams, hooks=hooks, config=cfg, report=report)
+
+
+def _permute_ssm_channels(P: Params, i: int, perm: np.ndarray, cfg_a):
+    """Permute the Mamba2 inner channels jointly across (z, x, conv, norm)
+    so the out-proj permutation is absorbed. Head-preserving perms only:
+    conv is depthwise and SSD is elementwise in the within-head channel, so
+    the region is permutation-equivariant (DESIGN.md §Arch-applicability)."""
+    d_inner = len(perm)
+    SSM = P["layers"]["ssm"]
+    in_proj = SSM["in_proj"][i]
+    z_cols = in_proj[:, :d_inner][:, perm]
+    x_cols = in_proj[:, d_inner:2 * d_inner][:, perm]
+    rest = in_proj[:, 2 * d_inner:]
+    SSM["in_proj"][i] = np.concatenate([z_cols, x_cols, rest], axis=1)
+    conv_w = np.array(SSM["conv_w"][i])
+    conv_b = np.array(SSM["conv_b"][i])
+    conv_w[:, :d_inner] = conv_w[:, :d_inner][:, perm]
+    conv_b[:d_inner] = conv_b[:d_inner][perm]
+    SSM["conv_w"][i] = conv_w
+    SSM["conv_b"][i] = conv_b
+    SSM["norm_scale"][i] = SSM["norm_scale"][i][perm]
+
+
+def build_quantized_model(model: Model, result: PTQResult) -> Model:
+    return build_model(model.cfg, quant_hooks=result.hooks)

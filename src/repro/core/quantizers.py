@@ -1,0 +1,232 @@
+"""Quantizers for the data formats in the paper (Appendix B).
+
+  * INT-q   — Eq. (4): symmetric per-channel weights (MSE-searched scale),
+              asymmetric dynamic per-token activations.
+  * FP4     — Eq. (5): OCP e2m1 element format, symmetric; per-channel
+              MSE-searched weight scale, per-token absmax activation scale.
+  * MXFP4   — FP4 elements with a shared power-of-2 scale per group of 32
+              (OCP microscaling), for weights and activations.
+
+All quantizers are fake-quant (quantize→dequantize) pure-jnp functions so they
+compose with jit/grad (via the STE in `ste_round`). Integer *storage* paths
+(packed int4) live in `repro.kernels.int4_matmul`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ste_round",
+    "int_quantize",
+    "fp4_quantize",
+    "int_weight_scales_mse",
+    "fp4_weight_scales_mse",
+    "quantize_weight",
+    "quantize_act",
+    "QuantSpec",
+    "FP4_VALUES",
+]
+
+# e2m1 representable magnitudes (OCP MX spec: e=2, m=1, no inf/nan).
+FP4_VALUES = jnp.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=jnp.float32)
+FP4_MAX = 6.0
+
+
+@jax.custom_vjp
+def ste_round(x):
+    """Round-to-nearest(-even ties) with a straight-through gradient."""
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Element quantizers
+# ---------------------------------------------------------------------------
+
+def int_quantize(x: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                 bits: int, *, signed: bool = True) -> jnp.ndarray:
+    """Integer fake-quant per Eq. (4): s·clip(⌊x/s⌉ − z, min A, max A) + s·z.
+
+    `scale`/`zero` broadcast against x. For the symmetric weight quantizer
+    zero = 0 and A = [−2^{q−1}+1, 2^{q−1}−1]; for the asymmetric activation
+    quantizer A = [0, 2^q − 1] with z = round(min(x)/s).
+    """
+    if signed:
+        lo, hi = -(2 ** (bits - 1)) + 1, 2 ** (bits - 1) - 1
+    else:
+        lo, hi = 0, 2 ** bits - 1
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(ste_round(x / scale) - zero, lo, hi)
+    return scale * (q + zero)
+
+
+def fp4_quantize(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """FP4 (e2m1) fake-quant per Eq. (5), symmetric (z = 0).
+
+    x/s is rounded to the nearest representable e2m1 value via exponent/
+    mantissa arithmetic (matches a LUT nearest-neighbor over FP4_VALUES with
+    round-half-to-even on the mantissa), then clipped to ±6 and rescaled.
+    """
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    v = x / scale
+    a = jnp.abs(v)
+    # Exponent of the fp4 binade; subnormals (a < 1) use the 0.5 step binade.
+    e = jnp.floor(jnp.log2(jnp.maximum(a, 1e-30)))
+    e = jnp.clip(e, 0.0, 2.0)  # binades: [1,2), [2,4), [4,8); below 1 → step 0.5
+    step = jnp.where(a < 1.0, 0.5, 2.0 ** (e - 1.0))  # m=1 → 2 mantissa steps/binade
+    q = ste_round(a / step) * step
+    q = jnp.minimum(q, FP4_MAX)
+    return scale * jnp.sign(v) * q
+
+
+# ---------------------------------------------------------------------------
+# Scale search (weights) — linear MSE search as in Appendix B
+# ---------------------------------------------------------------------------
+
+def _mse_scale_search(w: jnp.ndarray, axis: int, qfun, maxval: float,
+                      n_grid: int = 80, shrink: float = 0.2) -> jnp.ndarray:
+    """Per-channel linear search s = r·absmax/maxval, r ∈ [shrink, 1]."""
+    absmax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    absmax = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny)
+    ratios = jnp.linspace(shrink, 1.0, n_grid)
+
+    def mse_for(r):
+        s = r * absmax / maxval
+        err = qfun(w, s) - w
+        return jnp.sum(err * err, axis=axis, keepdims=True)
+
+    mses = jax.vmap(mse_for)(ratios)  # [n_grid, ...]
+    best = jnp.argmin(mses, axis=0)
+    best_r = jnp.take(ratios, best)
+    return best_r * absmax / maxval
+
+
+def int_weight_scales_mse(w: jnp.ndarray, bits: int, *, axis: int = 0,
+                          n_grid: int = 80) -> jnp.ndarray:
+    """Symmetric per-channel INT scale via MSE linear search (z = 0)."""
+    maxval = 2 ** (bits - 1) - 1
+
+    def qfun(x, s):
+        return int_quantize(x, s, 0.0, bits, signed=True)
+
+    return _mse_scale_search(w, axis, qfun, maxval, n_grid=n_grid)
+
+
+def fp4_weight_scales_mse(w: jnp.ndarray, *, axis: int = 0,
+                          n_grid: int = 80) -> jnp.ndarray:
+    """Symmetric per-channel FP4 scale via MSE linear search."""
+    return _mse_scale_search(w, axis, fp4_quantize, FP4_MAX, n_grid=n_grid)
+
+
+# ---------------------------------------------------------------------------
+# MX grouping
+# ---------------------------------------------------------------------------
+
+def _mx_shared_scale(x: jnp.ndarray, group: int, maxval_log2: float) -> jnp.ndarray:
+    """Shared power-of-2 scale per `group` along the last axis (E8M0 style):
+    2^(⌊log2 absmax⌋ − emax_elem), emax_elem = log2(largest element binade)."""
+    g = x.reshape(*x.shape[:-1], x.shape[-1] // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    absmax = jnp.maximum(absmax, jnp.finfo(jnp.float32).tiny)
+    e = jnp.floor(jnp.log2(absmax)) - maxval_log2
+    return 2.0 ** e, g
+
+
+def mxfp4_quantize(x: jnp.ndarray, *, group: int = 32) -> jnp.ndarray:
+    """MXFP4 fake-quant: e2m1 elements + shared pow-2 scale per 32 elements."""
+    if x.shape[-1] % group:
+        raise ValueError(f"last dim {x.shape[-1]} not divisible by group {group}")
+    s, g = _mx_shared_scale(x, group, maxval_log2=2.0)  # fp4 emax = 2 (val 4; 6 = 1.5·4)
+    q = fp4_quantize(g, s)
+    return q.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Unified spec + entry points
+# ---------------------------------------------------------------------------
+
+Format = Literal["int4", "int8", "fp4", "mxfp4", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """What to quantize and how — one per tensor class (weights / acts)."""
+    fmt: Format = "int4"
+    bits: int = 4
+    mx_group: int = 32
+    scale_grid: int = 80
+
+    @property
+    def enabled(self) -> bool:
+        return self.fmt != "none"
+
+
+def quantize_weight(w: jnp.ndarray, spec: QuantSpec, *, axis: int = 0,
+                    precomputed_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fake-quantize a weight matrix per the spec (channel axis = `axis`,
+    i.e. scales are per-output-channel when axis is the input dim)."""
+    if not spec.enabled:
+        return w
+    if spec.fmt in ("int4", "int8"):
+        bits = 4 if spec.fmt == "int4" else 8
+        s = precomputed_scale if precomputed_scale is not None else \
+            int_weight_scales_mse(w, bits, axis=axis, n_grid=spec.scale_grid)
+        return int_quantize(w, s, 0.0, bits, signed=True)
+    if spec.fmt == "fp4":
+        s = precomputed_scale if precomputed_scale is not None else \
+            fp4_weight_scales_mse(w, axis=axis, n_grid=spec.scale_grid)
+        return fp4_quantize(w, s)
+    if spec.fmt == "mxfp4":
+        # MX scales are data-derived pow-2 per group of the *input-dim* axis.
+        if axis != 0:
+            w = jnp.swapaxes(w, axis, 0)
+        q = mxfp4_quantize(jnp.swapaxes(w, 0, -1), group=spec.mx_group)
+        q = jnp.swapaxes(q, 0, -1)
+        if axis != 0:
+            q = jnp.swapaxes(q, axis, 0)
+        return q
+    raise ValueError(spec.fmt)
+
+
+def quantize_act(x: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """Dynamic activation fake-quant over the last (feature) axis.
+
+    int4/int8 → asymmetric per-token (Eq. 4 with dynamic z, s);
+    fp4       → symmetric per-token absmax scale;
+    mxfp4     → shared pow-2 scale per group of 32.
+    """
+    if not spec.enabled:
+        return x
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if spec.fmt in ("int4", "int8"):
+        bits = 4 if spec.fmt == "int4" else 8
+        mn = jnp.min(xf, axis=-1, keepdims=True)
+        mx = jnp.max(xf, axis=-1, keepdims=True)
+        s = jnp.maximum((mx - mn) / (2 ** bits - 1), jnp.finfo(jnp.float32).tiny)
+        z = jnp.round(mn / s)
+        q = jnp.clip(ste_round(xf / s) - z, 0, 2 ** bits - 1)
+        out = s * (q + z)
+    elif spec.fmt == "fp4":
+        s = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / (2 ** (4 - 1) - 1)
+        out = fp4_quantize(xf, s)
+    elif spec.fmt == "mxfp4":
+        out = mxfp4_quantize(xf, group=spec.mx_group)
+    else:
+        raise ValueError(spec.fmt)
+    return out.astype(dtype)

@@ -1,0 +1,123 @@
+"""Data pipeline: deterministic synthetic LM corpus + file-backed byte
+corpus, host-sharded batching with background prefetch.
+
+The synthetic corpus is a first-order Markov chain over a Zipf vocabulary —
+it has real learnable structure (bigram statistics), so the end-to-end
+example can train a small LM whose perplexity measurably improves, and PTQ
+degradation is measurable against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticCorpus", "ByteCorpus", "batch_iterator",
+           "Prefetcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    batch_size: int          # per-host batch
+    seed: int = 0
+    host_id: int = 0
+    num_hosts: int = 1
+
+
+class SyntheticCorpus:
+    """Markov-Zipf synthetic token stream (deterministic per seed)."""
+
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 32):
+        self.vocab = vocab
+        rng = np.random.default_rng(seed)
+        # each token transitions to `branching` preferred successors
+        self.succ = rng.integers(0, vocab, size=(vocab, branching))
+        probs = 1.0 / np.arange(1, branching + 1)
+        self.succ_p = probs / probs.sum()
+        base = 1.0 / np.arange(1, vocab + 1) ** 1.1
+        self.base_p = base / base.sum()
+
+    def sample(self, rng: np.random.Generator, length: int) -> np.ndarray:
+        out = np.empty(length, np.int32)
+        tok = int(rng.choice(self.vocab, p=self.base_p))
+        for i in range(length):
+            out[i] = tok
+            if rng.random() < 0.85:
+                tok = int(self.succ[tok, rng.choice(len(self.succ_p),
+                                                    p=self.succ_p)])
+            else:
+                tok = int(rng.choice(self.vocab, p=self.base_p))
+        return out
+
+
+class ByteCorpus:
+    """File-backed byte-level corpus (vocab 256)."""
+
+    def __init__(self, path: str):
+        with open(path, "rb") as f:
+            self.data = np.frombuffer(f.read(), dtype=np.uint8)
+        if len(self.data) < 2:
+            raise ValueError("corpus too small")
+
+    @property
+    def vocab(self) -> int:
+        return 256
+
+    def sample(self, rng: np.random.Generator, length: int) -> np.ndarray:
+        start = int(rng.integers(0, max(1, len(self.data) - length - 1)))
+        chunk = self.data[start:start + length]
+        if len(chunk) < length:
+            chunk = np.pad(chunk, (0, length - len(chunk)))
+        return chunk.astype(np.int32)
+
+
+def batch_iterator(corpus, cfg: DataConfig) -> Iterator[dict]:
+    """Yields {"tokens": [B, S], "labels": [B, S]} int32 batches.
+
+    Host-sharded: host i draws from a disjoint seed stream, so a multi-host
+    launch partitions the data without coordination.
+    """
+    rng = np.random.default_rng(cfg.seed * cfg.num_hosts + cfg.host_id + 1)
+    while True:
+        seqs = np.stack([corpus.sample(rng, cfg.seq_len + 1)
+                         for _ in range(cfg.batch_size)])
+        yield {"tokens": seqs[:, :-1].astype(np.int32),
+               "labels": seqs[:, 1:].astype(np.int32)}
+
+
+class Prefetcher:
+    """Background-thread prefetch (keeps the host busy building the next
+    batch while the device runs the step)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.it = it
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.thread = threading.Thread(target=self._fill, daemon=True)
+        self._stop = False
+        self.thread.start()
+
+    def _fill(self):
+        try:
+            for item in self.it:
+                if self._stop:
+                    return
+                self.q.put(item)
+        finally:
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop = True

@@ -1,0 +1,96 @@
+"""Mesh context + logical-axis sharding annotations (MaxText-style).
+
+Models annotate activations with *logical* axis names; the rules below map
+them to mesh axes. Outside a mesh context the annotations are no-ops, so the
+same model code runs on a laptop and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["mesh_context", "current_mesh", "logical_to_spec", "shard_act",
+           "AXIS_RULES"]
+
+_LOCAL = threading.local()
+
+# logical axis → mesh axes (None = replicated). The "pod" axis extends data
+# parallelism across pods; "fsdp_axes" is where ZeRO-3 weight shards live.
+AXIS_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": ("data",),        # sequence parallelism for long-context
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "fsdp": ("pod", "data"),       # weight non-model dim for ZeRO-3 archs
+    "kv_len": None,
+    "kv_cache_seq": "model",       # sequence-sharded KV cache (flash-decode)
+}
+
+
+def mesh_axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: dict | None = None):
+    """Enter a mesh (+ optional axis-rule overrides, e.g. the serving
+    layout replicates 'batch' and spreads 'kv_cache_seq' over every axis)."""
+    prev = getattr(_LOCAL, "mesh", None)
+    prev_rules = getattr(_LOCAL, "rules", None)
+    _LOCAL.mesh = mesh
+    _LOCAL.rules = dict(AXIS_RULES, **(rules or {}))
+    try:
+        yield mesh
+    finally:
+        _LOCAL.mesh = prev
+        _LOCAL.rules = prev_rules
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_LOCAL, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_LOCAL, "rules", None) or AXIS_RULES
+
+
+def _resolve(axis: str | None, mesh: Mesh) -> tuple[str, ...] | str | None:
+    if axis is None:
+        return None
+    rule = current_rules().get(axis, None)
+    if rule is None:
+        return None
+    names = set(mesh.axis_names)
+    if isinstance(rule, str):
+        return rule if rule in names else None
+    picked = tuple(r for r in rule if r in names)
+    return picked if picked else None
+
+
+def logical_to_spec(logical: tuple[str | None, ...], mesh: Mesh) -> P:
+    return P(*[_resolve(a, mesh) for a in logical])
+
+
+def shard_act(x: jax.Array, logical: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axis names (no-op without mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

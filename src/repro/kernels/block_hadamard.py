@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: online block-Hadamard rotation  X · (I_n ⊗ H_b).
+
+TPU adaptation (see DESIGN.md §3): instead of the GPU butterfly FWHT, the
+rotation is expressed as an MXU matmul against a block-diagonal expansion of
+H_b held in VMEM:
+
+  * b ≥ 128 : column tile TD = b, operand H_b directly (a [b, b] matmul).
+  * b < 128 : column tile TD = 128 with operand I_{128/b} ⊗ H_b, so the MXU
+    contraction is fully 128-aligned. The extra zeros are free — at b ≤ 128
+    the op is memory-bound (arithmetic intensity TD/2 FLOP/byte < the v5e
+    ridge ≈ 240), so MXU padding costs no wall-clock.
+
+The grid walks (row tiles × column tiles); each kernel instance loads one
+[TM, TD] activation tile plus the [TD, TD] rotation operand and performs a
+single dot. Rows are padded to the row tile; the rotation operand is built
+once per (b, TD) at trace time.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hadamard import hadamard
+
+__all__ = ["block_hadamard", "rotation_operand", "DEFAULT_ROW_TILE"]
+
+DEFAULT_ROW_TILE = 256
+_LANE = 128  # TPU lane width / MXU edge
+
+
+@functools.lru_cache(maxsize=None)
+def _rotation_operand_np(b: int, td: int) -> np.ndarray:
+    """I_{td/b} ⊗ H_b / √b as float32, td a multiple of b."""
+    hb = hadamard(b).astype(np.float32) / math.sqrt(b)
+    reps = td // b
+    if reps == 1:
+        return hb
+    return np.kron(np.eye(reps, dtype=np.float32), hb)
+
+
+def rotation_operand(b: int, td: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.asarray(_rotation_operand_np(b, td), dtype=dtype)
+
+
+def _kernel(x_ref, h_ref, o_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    y = jax.lax.dot_general(
+        x.astype(jnp.float32), h,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _column_tile(b: int, d: int) -> int:
+    """Smallest multiple of b that divides d and is ≥ the 128 lane width
+    (bounded by 2048 to cap the VMEM operand at 16 MiB f32)."""
+    n = d // b
+    best = b
+    for m in range(1, n + 1):
+        if n % m:
+            continue
+        td = b * m
+        if td > 2048:
+            break
+        best = td
+        if td >= _LANE:
+            break
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("b", "row_tile", "interpret"))
+def block_hadamard(x: jnp.ndarray, b: int, *, row_tile: int = DEFAULT_ROW_TILE,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Apply the normalized block rotation over the last axis of x [..., D].
+
+    interpret=True runs the kernel body in Python (CPU validation); on TPU
+    pass interpret=False for the compiled Mosaic kernel.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    if d % b:
+        raise ValueError(f"feature dim {d} not divisible by block size {b}")
+    m = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
+    x2 = x.reshape(m, d)
+
+    td = _column_tile(b, d)
+    tm = min(row_tile, max(8, m))
+    pad_m = (-m) % tm
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    mp = x2.shape[0]
+
+    h_op = rotation_operand(b, td, dtype=jnp.float32)
+
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, d), x.dtype),
+        grid=(mp // tm, d // td),
+        in_specs=[
+            pl.BlockSpec((tm, td), lambda i, j: (i, j)),
+            pl.BlockSpec((td, td), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, td), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x2, h_op)
+
+    if pad_m:
+        out = out[:m]
+    return out.reshape(orig_shape)

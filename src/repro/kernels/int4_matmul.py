@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: W4A4 integer GEMM with in-kernel nibble unpack.
+
+out = x̂ @ ŵ where x̂ = s_a·(q_a + z_a) (per-token asymmetric int4 codes from
+`hadamard_quant`) and ŵ = s_w·q_w (symmetric int4, packed two rows per byte,
+per-output-channel scale).
+
+    out = s_a · s_w · (q_a @ q_w  +  z_a · colsum(q_w))
+
+The integer product q_a @ q_w accumulates in int32 on the MXU (int8×int8
+dot), the correction term uses precomputed int32 column sums, and the float
+epilogue applies both scales — i.e. true integer arithmetic, not fake-quant.
+
+Grid (M/TM, N/TN, K/TK) with a VMEM accumulator scratch; K is the innermost
+(fastest) grid axis so the accumulator tile stays resident across the K walk.
+Weights stay packed in HBM (half the bytes of int8) and are unpacked in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["int4_matmul"]
+
+
+def _kernel(qa_ref, wp_ref, sa_ref, za_ref, sw_ref, colsum_ref, o_ref,
+            acc_ref, *, n_k):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qa = qa_ref[...].astype(jnp.int32)            # [TM, TK]
+    wp = wp_ref[...]                               # [TK/2, TN] packed uint8
+    lo = (wp & 0xF).astype(jnp.int32)
+    hi = ((wp >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    tk2, tn = wp.shape
+    w = jnp.stack([lo, hi], axis=1).reshape(2 * tk2, tn)   # [TK, TN] int32
+    acc_ref[...] += jax.lax.dot_general(
+        qa, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k_idx == n_k - 1)
+    def _epilogue():
+        sa = sa_ref[...]                           # [TM, 1]
+        za = za_ref[...]                           # [TM, 1]
+        sw = sw_ref[...]                           # [1, TN]
+        cs = colsum_ref[...].astype(jnp.float32)   # [1, TN]
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = ((sa * sw) * (acc + za * cs)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "tm", "tn", "tk",
+                                             "interpret"))
+def int4_matmul(act_codes: jnp.ndarray, act_scale: jnp.ndarray,
+                act_zero: jnp.ndarray, w_packed: jnp.ndarray,
+                w_scale: jnp.ndarray, *, out_dtype=jnp.float32,
+                tm: int = 128, tn: int = 128, tk: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """act_codes [M, K] int8 (asym, [0, 15]); act_scale/zero [M, 1] f32;
+    w_packed [K/2, N] uint8; w_scale [N] or [1, N] f32 → [M, N] out_dtype."""
+    m, k = act_codes.shape
+    k2, n = w_packed.shape
+    if 2 * k2 != k:
+        raise ValueError(f"packed K mismatch: acts K={k}, weights K={2 * k2}")
+    w_scale = w_scale.reshape(1, n).astype(jnp.float32)
+
+    # Precompute per-channel weight-code column sums (int32) for the
+    # asymmetric-activation correction term.
+    lo = (w_packed & 0xF).astype(jnp.int32)
+    hi = ((w_packed >> 4) & 0xF).astype(jnp.int32)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    colsum = (jnp.sum(lo, axis=0) + jnp.sum(hi, axis=0)).reshape(1, n)
+
+    tm = min(tm, max(8, m))
+    tn = min(tn, n)
+    tk = min(tk, k)
+    pad_m = (-m) % tm
+    if pad_m:
+        act_codes = jnp.pad(act_codes, ((0, pad_m), (0, 0)))
+        act_scale = jnp.pad(act_scale, ((0, pad_m), (0, 0)), constant_values=1)
+        act_zero = jnp.pad(act_zero, ((0, pad_m), (0, 0)))
+    mp = act_codes.shape[0]
+    if n % tn or k % tk or (tk % 2):
+        raise ValueError(f"N={n} K={k} must tile by (tn={tn}, tk={tk})")
+    n_k = k // tk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        out_shape=jax.ShapeDtypeStruct((mp, n), out_dtype),
+        grid=(mp // tm, n // tn, n_k),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk // 2, tn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((tm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, tn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.int32)],
+        interpret=interpret,
+    )(act_codes, w_packed, act_scale, act_zero, w_scale, colsum)
+
+    if pad_m:
+        out = out[:m]
+    return out

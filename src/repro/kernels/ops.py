@@ -1,0 +1,83 @@
+"""jit'd public entry points for the kernels, with backend dispatch.
+
+On TPU the Pallas kernels compile to Mosaic; everywhere else (this CPU
+container, debugging) they run in interpret mode or fall back to the jnp
+references. `use_kernels(False)` forces the reference path (used by the
+dry-run, where the XLA-level graph is what the roofline reads).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .block_hadamard import block_hadamard as _bh_kernel
+from .hadamard_quant import hadamard_quant as _hq_kernel
+from .int4_matmul import int4_matmul as _i4_kernel
+
+__all__ = [
+    "use_kernels",
+    "kernels_enabled",
+    "block_hadamard",
+    "hadamard_quant",
+    "int4_matmul",
+    "pack_int4_weights",
+]
+
+_STATE = {"enabled": True}
+
+
+def kernels_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool):
+    prev = _STATE["enabled"]
+    _STATE["enabled"] = enabled
+    try:
+        yield
+    finally:
+        _STATE["enabled"] = prev
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def block_hadamard(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Online block rotation X·(I ⊗ H_b); Pallas on TPU, interpret elsewhere."""
+    if not kernels_enabled():
+        return _ref.block_hadamard_ref(x, b)
+    return _bh_kernel(x, b, interpret=not _on_tpu())
+
+
+def hadamard_quant(x: jnp.ndarray, b: int, *, bits: int = 4):
+    """Fused rotate+quantize → (codes, scale, zero)."""
+    if not kernels_enabled():
+        return _ref.hadamard_quant_ref(x, b, bits)
+    return _hq_kernel(x, b, bits=bits, interpret=not _on_tpu())
+
+
+def int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
+                **kw) -> jnp.ndarray:
+    """True-integer W4A4 GEMM."""
+    if not kernels_enabled():
+        return _ref.int4_matmul_ref(act_codes, act_scale, act_zero,
+                                    w_packed, w_scale)
+    return _i4_kernel(act_codes, act_scale, act_zero, w_packed, w_scale,
+                      interpret=not _on_tpu(), **kw)
+
+
+def pack_int4_weights(w: jnp.ndarray, scale: jnp.ndarray):
+    """Quantize a [K, N] float weight symmetrically to int4 and pack.
+
+    Returns (packed uint8 [K/2, N], scale [1, N]). `scale` is per output
+    channel (e.g. from `int_weight_scales_mse`), already applied.
+    """
+    scale = scale.reshape(1, -1)
+    codes = jnp.clip(jnp.round(w / scale), -7, 7).astype(jnp.int8)
+    return _ref.int4_pack(codes), scale

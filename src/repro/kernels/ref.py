@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The test suite sweeps shapes/dtypes and asserts the interpret-mode kernels
+match these references; the benchmarks use them as the unfused baseline.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hadamard import block_hadamard_transform
+
+__all__ = [
+    "block_hadamard_ref",
+    "hadamard_quant_ref",
+    "int4_pack",
+    "int4_unpack",
+    "int4_matmul_ref",
+    "quantize_act_int_ref",
+]
+
+
+def block_hadamard_ref(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """X · (I ⊗ H_b) over the last axis (normalized)."""
+    return block_hadamard_transform(x, b)
+
+
+def quantize_act_int_ref(x: jnp.ndarray, bits: int = 4):
+    """Per-token (last-axis) asymmetric integer quantization.
+
+    Returns (codes uint-range int8, scale f32 [..., 1], zero f32 [..., 1])
+    with dequant  x̂ = scale · (codes + zero).
+    """
+    xf = x.astype(jnp.float32)
+    mn = jnp.min(xf, axis=-1, keepdims=True)
+    mx = jnp.max(xf, axis=-1, keepdims=True)
+    s = jnp.maximum((mx - mn) / (2 ** bits - 1), jnp.finfo(jnp.float32).tiny)
+    z = jnp.round(mn / s)
+    codes = jnp.clip(jnp.round(xf / s) - z, 0, 2 ** bits - 1).astype(jnp.int8)
+    return codes, s, z
+
+
+def hadamard_quant_ref(x: jnp.ndarray, b: int, bits: int = 4):
+    """Fused oracle: block-Hadamard rotate then per-token asym int quant."""
+    return quantize_act_int_ref(block_hadamard_ref(x, b), bits)
+
+
+def int4_pack(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 codes (values in [-8, 7], stored int8) pairwise along axis 0:
+    rows 2k (low nibble) and 2k+1 (high nibble) → uint8 [K/2, N]."""
+    if codes.shape[0] % 2:
+        raise ValueError("K must be even to pack nibbles")
+    u = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo, hi = u[0::2], u[1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def int4_unpack(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of int4_pack → int8 codes in [-8, 7], shape [K, N]."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k2, n = packed.shape
+    out = jnp.stack([lo, hi], axis=1).reshape(2 * k2, n)
+    return out
+
+
+def int4_matmul_ref(act_codes: jnp.ndarray, act_scale: jnp.ndarray,
+                    act_zero: jnp.ndarray, w_packed: jnp.ndarray,
+                    w_scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer-arithmetic W4A4 GEMM oracle.
+
+    act: per-token asym codes (uint range, int8 storage) with
+         x̂ = s_a·(q_a + z_a); weights: packed symmetric int4 with
+         ŵ = s_w·q_w (s_w per output channel, [N] or [1, N]).
+    out = x̂ @ ŵ = s_a·s_w·(q_a @ q_w + z_a·Σ_k q_w).
+    """
+    w = int4_unpack(w_packed).astype(jnp.int32)            # [K, N]
+    qa = act_codes.astype(jnp.int32)                        # [M, K]
+    acc = qa @ w                                            # int32 [M, N]
+    colsum = jnp.sum(w, axis=0, keepdims=True)              # [1, N]
+    w_scale = w_scale.reshape(1, -1)
+    return (act_scale * w_scale) * (acc.astype(jnp.float32)
+                                    + act_zero * colsum.astype(jnp.float32))

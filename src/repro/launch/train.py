@@ -1,0 +1,117 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-1b --reduced \\
+        --steps 200 --batch 16 --seq 64 --workdir /tmp/run1
+
+Runs the fault-tolerant driver (retries, periodic checkpoints, straggler
+EWMA) over the synthetic or file-backed corpus. On a real multi-host TPU
+deployment the same entry point runs under `jax.distributed.initialize()`
+with the production mesh; on this host it runs single-device (or under
+`--host-devices N` for a local mesh).
+"""
+import argparse
+import os
+
+# must precede any jax import/device query
+_hd = os.environ.get("REPRO_HOST_DEVICES")
+if _hd:
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={_hd}"
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import (ByteCorpus, DataConfig, Prefetcher,
+                                 SyntheticCorpus, batch_iterator)
+from repro.distributed import shardings as SH
+from repro.distributed.context import mesh_context
+from repro.models.transformer import build_model
+from repro.optim import adamw
+from repro.runtime.driver import ElasticMesh, RuntimeConfig, TrainDriver
+from repro.train.step import TrainConfig, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-1b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--corpus", default=None,
+                    help="path to a byte corpus (default: synthetic)")
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+
+    mesh = None
+    if args.model_parallel > 1 or jax.device_count() > 1:
+        mesh = ElasticMesh(args.model_parallel).make()
+
+    corpus = ByteCorpus(args.corpus) if args.corpus else \
+        SyntheticCorpus(cfg.vocab, seed=0)
+    data_cfg = DataConfig(cfg.vocab, args.seq, args.batch,
+                          host_id=jax.process_index(),
+                          num_hosts=jax.process_count())
+    it = Prefetcher(batch_iterator(corpus, data_cfg))
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps)
+
+    def run():
+        params = model.init(jax.random.PRNGKey(0))
+        pshard = None
+        if mesh is not None:
+            pshard = SH.param_shardings(mesh, params, cfg.name)
+            params = jax.tree.map(jax.device_put, params, pshard)
+        opt = adamw.init_state(opt_cfg, params)
+        step = jax.jit(make_train_step(
+            model, opt_cfg,
+            TrainConfig(num_microbatches=args.microbatches,
+                        remat=args.remat),
+            param_shardings=pshard))
+        mgr = CheckpointManager(os.path.join(args.workdir, "ckpt"))
+        start = 0
+        if mgr.latest_step() is not None:
+            restored = mgr.restore(target={"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            start = mgr.latest_step()
+            print(f"resumed from step {start}")
+        else:
+            mgr.save(0, {"params": params, "opt": opt}, blocking=True)
+        driver = TrainDriver(step, mgr, RuntimeConfig(
+            checkpoint_every=args.checkpoint_every))
+
+        def report(s, state):
+            if s % 20 == 0:
+                print(f"step {s:6d}  ewma {driver.stats.ewma*1e3:8.1f} ms"
+                      f"  stragglers {len(driver.stats.stragglers)}")
+
+        (params, opt), end = driver.run(params, opt, it,
+                                        start_step=start,
+                                        num_steps=args.steps,
+                                        on_metrics=report)
+        print(f"finished at step {end}; failures={driver.failures} "
+              f"restores={driver.restores}")
+        return params
+
+    if mesh is not None:
+        with mesh_context(mesh):
+            run()
+    else:
+        run()
+    it.close()
+
+
+if __name__ == "__main__":
+    main()

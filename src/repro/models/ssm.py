@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Chunked SSD for train/prefill (quadratic within chunks + linear state
+recurrence across chunks) and an O(1)-per-token recurrent step for decode.
+Follows Dao & Gu 2024 (arXiv:2405.21060): scalar A per head, grouped B/C
+(n_groups=1), depthwise causal conv over (x, B, C), gated RMSNorm output.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_act
+from .layers import rmsnorm
+
+Params = dict[str, Any]
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int, state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * state  # x plus B, C (n_groups = 1)
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, d_model: int, *, expand: int, head_dim: int, state: int,
+             conv_width: int, dtype) -> Params:
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d_model)
+    in_dim = 2 * d_inner + 2 * state + n_heads  # z, x, B, C, dt
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d_model, in_dim)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_dim))
+                   * (1.0 / math.sqrt(conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d_model))
+                     * (1.0 / math.sqrt(d_inner))).astype(dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None):
+    """Depthwise causal conv over the sequence axis.
+
+    x: [B, S, C]; w: [W, C]. Returns (out [B, S, C], tail [B, W-1, C]) where
+    `tail` is the conv state to carry into decode.
+    """
+    width = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    tail = xp[:, -(width - 1):] if width > 1 else xp[:, :0]
+    return out + b, tail
+
+
+def _segsum_decay(da_cs: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular decay matrix exp(da_cs[q] − da_cs[k]) for k ≤ q.
+    da_cs: [..., Q, H] → [..., H, Q, Q]."""
+    q = da_cs.shape[-2]
+    diff = da_cs[..., :, None, :] - da_cs[..., None, :, :]   # [.., Q, Q, H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.where(mask[..., None], diff, -jnp.inf)
+    return jnp.exp(jnp.moveaxis(diff, -1, -3))                # [.., H, Q, Q]
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None):
+    """SSD scan. x: [B, S, H, P], dt: [B, S, H] (post-softplus), a: [H] (<0),
+    bmat/cmat: [B, S, N]. Returns (y [B, S, H, P], final_state [B, H, N, P]).
+    """
+    b, s, h, p_dim = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p_dim).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    da = dtc * a                                   # [b, nc, q, h]
+    da_cs = jnp.cumsum(da, axis=2)
+    da_sum = da_cs[:, :, -1]                       # [b, nc, h]
+
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    decay = _segsum_decay(da_cs)                   # [b, nc, h, q, k]
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)  # [b, nc, q, k]
+    m = scores[:, :, None] * decay                 # [b, nc, h, q, k]
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", m, dtc, xc)
+
+    # --- chunk-local states ---
+    state_decay = jnp.exp(da_sum[:, :, None] - da_cs)          # [b, nc, q, h]
+    sloc = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", bc, dtc * state_decay, xc)
+
+    # --- inter-chunk recurrence ---
+    if init_state is None:
+        h0 = jnp.zeros((b, h, n, p_dim), jnp.float32)
+    else:
+        h0 = init_state.astype(jnp.float32)
+
+    chunk_gain = jnp.exp(da_sum)                   # [b, nc, h]
+
+    def step(carry, inp):
+        s_c, g_c = inp                             # [b,h,n,p], [b,h]
+        prev = carry
+        new = prev * g_c[:, :, None, None] + s_c
+        return new, prev                           # emit state ENTERING chunk
+
+    final_state, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(sloc, 1, 0), jnp.moveaxis(chunk_gain, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)            # [b, nc, h, n, p]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cc, jnp.exp(da_cs), h_prev)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p_dim)[:, :s]
+    return y, final_state
+
+
+def ssm_block(x: jnp.ndarray, p: Params, *, head_dim: int, state: int,
+              chunk: int, cache: Params | None = None,
+              cache_index=None, act_in=None, out_proj_fn=None):
+    """Full Mamba2 block. Returns (out [B, S, d], new_cache).
+
+    `act_in(x, tag)` / `out_proj_fn(y, w)` are the PTQ hooks (capture or
+    quantize the in/out projection inputs; out_proj is the online-rotation
+    site for SSM archs — see DESIGN.md §Arch-applicability)."""
+    b, s, d = x.shape
+    d_inner = p["out_proj"].shape[0]
+    n_heads = p["A_log"].shape[0]
+
+    if act_in is not None:
+        x = act_in(x, "ssm_in")
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+
+    decode = cache is not None and s == 1
+    conv_state_in = cache["conv"] if cache is not None else None
+    if decode:
+        # roll the conv window by one step
+        window = jnp.concatenate([conv_state_in.astype(xbc.dtype), xbc], 1)
+        conv_out = jnp.sum(window * p["conv_w"][None], axis=1, keepdims=True) \
+            + p["conv_b"]
+        new_conv = window[:, 1:]
+    else:
+        conv_out, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                          init_state=conv_state_in)
+    xbc = jax.nn.silu(conv_out)
+
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xs = xs.reshape(b, s, n_heads, head_dim)
+    xs = shard_act(xs, ("batch", "seq", "ssm_heads", None))
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    if decode:
+        prev = cache["state"]                                   # [b,h,n,p]
+        da = jnp.exp(dtv[:, 0] * a)                             # [b,h]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bmat[:, 0].astype(jnp.float32),
+                         dtv[:, 0], xs[:, 0].astype(jnp.float32))
+        new_state = prev * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32),
+                       new_state)[:, None]                       # [b,1,h,p]
+    else:
+        init = cache["state"] if cache is not None else None
+        y, new_state = ssd_chunked(xs, dtv, a, bmat, cmat, chunk,
+                                   init_state=init)
+
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (Mamba2: norm(y * silu(z)))
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    if out_proj_fn is not None:
+        out = out_proj_fn(y, p["out_proj"])
+    else:
+        out = y @ p["out_proj"]
+    out = shard_act(out, ("batch", "seq", "embed"))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": new_state}
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, d_model: int, *, expand: int, head_dim: int,
+                   state: int, conv_width: int, dtype=jnp.bfloat16) -> Params:
+    d_inner, n_heads, conv_dim = ssm_dims(d_model, expand, head_dim, state)
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, n_heads, state, head_dim), jnp.float32),
+    }

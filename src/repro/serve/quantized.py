@@ -1,0 +1,242 @@
+"""True-integer W4A4 serving path for dense-family archs.
+
+Unlike the fake-quant evaluation path (which stores dequantized bf16
+weights), this module *packs* every projection to int4 (two nibbles/byte,
+per-output-channel scale) and executes decode with int8 integer arithmetic:
+
+    per projection:  x → per-token asym int4 codes (+scale,+zero)
+                     q_a @ q_w int8·int8→int32 on the MXU
+                     float epilogue  s_a·s_w·(acc + z_a·colsum)
+
+and the online block-Hadamard at R̃₃ runs fused with the quantizer
+(`hadamard_quant`). Weight HBM traffic drops 4× vs bf16 and activation
+traffic 2×, which is what moves the memory-roofline term in §Perf.
+
+Dense/VLM decoder geometry only (the paper's serving target); the KV cache
+stays bf16 (a further 4× KV win is possible with int4 KV — noted as future
+work in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import shard_act
+from repro.kernels import ref as kref
+from repro.models import layers as L
+from repro.models.config import ArchConfig
+
+Params = dict[str, Any]
+
+PROJ_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def pack_linear(w: jnp.ndarray) -> Params:
+    """Symmetric per-output-channel int4 pack of [K, N] (absmax scale —
+    PTQ pipelines hand us weights already rounded to their grid, so absmax
+    is exact on grid points)."""
+    scale = jnp.max(jnp.abs(w), axis=0) / 7.0
+    scale = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(w / scale[None]), -7, 7).astype(jnp.int8)
+    return {"packed": kref.int4_pack(codes),
+            "scale": scale.astype(jnp.float32)}
+
+
+def pack_dense_params(params: Params, cfg: ArchConfig) -> Params:
+    """Pack every per-layer projection; keep embeddings/norms/head bf16."""
+    L_ = params["layers"]
+    out = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "lm_head": params["lm_head"],
+        "layers": {
+            "attn_norm": L_["attn_norm"],
+            "ffn_norm": L_["ffn_norm"],
+        },
+    }
+    packed_attn = {}
+    for name in ("wq", "wk", "wv", "wo"):
+        w = L_["attn"][name]
+        packed = jax.vmap(pack_linear)(w)
+        packed_attn[name] = packed
+    for bias in ("bq", "bk", "bv"):
+        if bias in L_["attn"]:
+            packed_attn[bias] = L_["attn"][bias]
+    out["layers"]["attn"] = packed_attn
+    packed_ffn = {}
+    for name in ("w_gate", "w_up", "w_down"):
+        if name in L_["ffn"]:
+            packed_ffn[name] = jax.vmap(pack_linear)(L_["ffn"][name])
+    out["layers"]["ffn"] = packed_ffn
+    return out
+
+
+def _int_linear(x: jnp.ndarray, packed: Params, *, bits: int = 4):
+    """x [..., K] float → int4 quantize per token → integer GEMM → float."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    codes, s, z = kref.quantize_act_int_ref(x2, bits)
+    y = kref.int4_matmul_ref(codes, s, z, packed["packed"], packed["scale"])
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def _rot_int_linear(h: jnp.ndarray, packed: Params, block_size: int):
+    """Online block rotation fused with quantization, then integer GEMM
+    (the R̃₃ → Q_A → W_down path of Figure 7)."""
+    lead = h.shape[:-1]
+    h2 = h.reshape(-1, h.shape[-1])
+    codes, s, z = kref.hadamard_quant_ref(h2, block_size, 4)
+    y = kref.int4_matmul_ref(codes, s, z, packed["packed"], packed["scale"])
+    return y.reshape(*lead, -1).astype(h.dtype)
+
+
+class QuantizedDenseLM:
+    """Integer-arithmetic decode for dense-family configs.
+
+    Built from a PTQ result: `pack_dense_params(ptq.params, cfg)`. Matches
+    the fake-quant model's outputs up to activation-quant rounding ties.
+    """
+
+    def __init__(self, cfg: ArchConfig, *, block_size: int = 32,
+                 kv_bits: int | None = None):
+        if cfg.family not in ("dense", "vlm"):
+            raise ValueError("integer serving path covers dense archs")
+        self.cfg = cfg.validate()
+        self.block_size = block_size
+        # kv_bits=4 → int4 KV cache with per-(position, head) scales: cache
+        # HBM traffic drops ~3.6× vs bf16 (the dominant decode byte stream
+        # at 32k context — §Perf cell C3). None → bf16 cache.
+        self.kv_bits = kv_bits
+        self.attn_spec = L.AttnSpec(
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, causal=True, rope_theta=cfg.rope_theta,
+            qkv_bias=cfg.qkv_bias)
+
+    KV_GROUP = 8   # scale granularity along head_dim (KIVI-style groups)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.kv_bits is not None:
+            kv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
+            ng = dh // self.KV_GROUP
+            one = {
+                "k": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+                "v": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
+                "k_scale": jnp.ones((batch, max_len, kv, ng), jnp.float32),
+                "v_scale": jnp.ones((batch, max_len, kv, ng), jnp.float32),
+            }
+        else:
+            one = L.init_attention_cache(batch, max_len, self.attn_spec,
+                                         dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (self.cfg.n_layers, *a.shape)), one)
+
+    def _cache_write(self, cache, k, v, index):
+        """Write new K/V at `index` (bf16 or int-quantized per kv_bits with
+        per-(position, head, group-of-8) scales)."""
+        if self.kv_bits is None:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
+            return {"k": ck, "v": cv}
+        qmax = 2 ** (self.kv_bits - 1) - 1
+        g = self.KV_GROUP
+
+        def q(x):
+            shp = x.shape
+            xg = x.reshape(*shp[:-1], shp[-1] // g, g)
+            s = jnp.maximum(jnp.max(jnp.abs(xg), -1, keepdims=True),
+                            1e-6) / qmax
+            codes = jnp.clip(jnp.round(xg / s), -qmax, qmax)
+            return (codes.reshape(shp).astype(jnp.int8),
+                    s[..., 0].astype(jnp.float32))
+
+        kq, ks = q(k.astype(jnp.float32))
+        vq, vs = q(v.astype(jnp.float32))
+        out = dict(cache)
+        out["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                (0, index, 0, 0))
+        out["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                (0, index, 0, 0))
+        out["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                      (0, index, 0, 0))
+        out["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                      (0, index, 0, 0))
+        return out
+
+    def _cache_read(self, cache):
+        if self.kv_bits is None:
+            return cache["k"], cache["v"]
+        g = self.KV_GROUP
+
+        def dq(codes, scale):
+            shp = codes.shape
+            cg = codes.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // g, g)
+            return (cg * scale[..., None]).reshape(shp)
+
+        return dq(cache["k"], cache["k_scale"]), \
+            dq(cache["v"], cache["v_scale"])
+
+    def _block(self, x, blk, cache, index):
+        cfg = self.cfg
+        spec = self.attn_spec
+        b, s, d = x.shape
+        h_, kv, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+
+        hx = L.apply_norm(x, blk["attn_norm"], cfg.norm)
+        q = _int_linear(hx, blk["attn"]["wq"])
+        k = _int_linear(hx, blk["attn"]["wk"])
+        v = _int_linear(hx, blk["attn"]["wv"])
+        if spec.qkv_bias:
+            q = q + blk["attn"]["bq"]
+            k = k + blk["attn"]["bk"]
+            v = v + blk["attn"]["bv"]
+        q = q.reshape(b, s, h_, dh)
+        k = k.reshape(b, s, kv, dh)
+        v = v.reshape(b, s, kv, dh)
+        pos = jnp.broadcast_to(jnp.arange(s)[None] + index, (b, s))
+        q = L.apply_rope(q, pos, spec.rope_theta)
+        k = L.apply_rope(k, pos, spec.rope_theta)
+        new_cache = self._cache_write(cache, k, v, index)
+        k_all, v_all = self._cache_read(new_cache)
+        s_k = k_all.shape[1]
+        valid = jnp.arange(s_k) <= index
+        g = h_ // kv
+        qg = q.reshape(b, s, kv, g, dh)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                            k_all.astype(jnp.float32)) / math.sqrt(dh)
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("bkgqs,bskd->bqkgd", probs,
+                          v_all.astype(jnp.float32))
+        attn = attn.reshape(b, s, h_ * dh).astype(x.dtype)
+        x = x + _int_linear(attn, blk["attn"]["wo"])
+
+        hx = L.apply_norm(x, blk["ffn_norm"], cfg.norm)
+        if "w_gate" in blk["ffn"]:
+            hid = jax.nn.silu(_int_linear(hx, blk["ffn"]["w_gate"])) \
+                * _int_linear(hx, blk["ffn"]["w_up"])
+        else:
+            hid = jax.nn.gelu(_int_linear(hx, blk["ffn"]["w_up"]))
+        hid = shard_act(hid, ("batch", "seq", "mlp"))
+        x = x + _rot_int_linear(hid, blk["ffn"]["w_down"], self.block_size)
+        return x, new_cache
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    cache: Params, index: jnp.ndarray):
+        cfg = self.cfg
+        cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+        x = shard_act(x, ("batch", "seq", "embed"))
+
+        def body(carry, inp):
+            blk, c = inp
+            return self._block(carry, blk, c, index)
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = L.apply_norm(x, params["final_norm"], cfg.norm)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        return logits[:, 0], new_cache

@@ -1,0 +1,123 @@
+"""Serving steps: prefill + decode, greedy/temperature sampling, and a
+continuous-batching scheduler for the example server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params: Params, batch: Params, cache: Params):
+        logits, cache = model.prefill(params, batch, cache)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model, *, temperature: float = 0.0) -> Callable:
+    def decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                    index: jnp.ndarray, rng: jax.Array | None = None):
+        logits, cache = model.decode_step(params, tokens, cache, index)
+        if temperature > 0 and rng is not None:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+
+    return decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+class BatchScheduler:
+    """Continuous batching (per-token admission, vLLM-style fixed slots).
+
+    All active slots advance one token per `step()`; a slot still consuming
+    its prompt feeds the next prompt token, a generating slot feeds its last
+    sampled token. Per-slot cache indices (vector `cache_index` support in
+    the attention layer) keep every sequence's KV writes independent, so new
+    requests are admitted mid-flight without disturbing running ones.
+
+    Attention-cache models only (SSM/hybrid decode is lockstep-batched via
+    `make_decode_step` directly — their state has no position index).
+    """
+
+    def __init__(self, model, params, *, slots: int, max_len: int,
+                 temperature: float = 0.0, cache_dtype=jnp.float32):
+        if model.cfg.family in ("ssm", "hybrid"):
+            raise ValueError("per-slot scheduler requires attention caches")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.prompt_ptr: dict[int, int] = {}
+        self.pos = [0] * slots
+        self.next_feed = [0] * slots
+        self.cache = model.init_cache(slots, max_len, dtype=cache_dtype)
+        self._decode = jax.jit(make_decode_step(model,
+                                                temperature=temperature))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            self.active[slot] = req
+            self.prompt_ptr[slot] = 0
+            self.pos[slot] = 0
+            self.next_feed[slot] = req.prompt[0]
+
+    def step(self) -> list[Request]:
+        """Advance every active slot one token; returns finished requests."""
+        self._admit()
+        if not self.active:
+            return []
+        tokens = jnp.asarray([[self.next_feed[s]] for s in range(self.slots)],
+                             jnp.int32)
+        idx = jnp.asarray([self.pos[s] for s in range(self.slots)], jnp.int32)
+        nxt, _, self.cache = self._decode(self.params, tokens, self.cache, idx)
+
+        finished = []
+        for slot, req in list(self.active.items()):
+            self.pos[slot] += 1
+            ptr = self.prompt_ptr[slot]
+            if ptr + 1 < len(req.prompt):
+                # still prefilling: feed the next prompt token
+                self.prompt_ptr[slot] = ptr + 1
+                self.next_feed[slot] = req.prompt[ptr + 1]
+                continue
+            tok = int(nxt[slot, 0])
+            req.generated.append(tok)
+            self.next_feed[slot] = tok
+            if req.done or self.pos[slot] >= self.max_len - 1:
+                finished.append(req)
+                del self.active[slot]
+                self.prompt_ptr.pop(slot, None)
+        return finished
+
+    def run(self) -> list[Request]:
+        done = []
+        while self.queue or self.active:
+            done.extend(self.step())
+        return done

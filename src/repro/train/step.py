@@ -1,0 +1,101 @@
+"""Training step factory: microbatched gradient accumulation, remat,
+optional int8 error-feedback gradient compression on the cross-pod reduce.
+
+The returned `train_step(params, opt_state, batch)` is pjit-ready: all
+cross-device communication is expressed through shardings (GSPMD), and the
+microbatch loop is a `lax.scan` so the compiled HLO stays compact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.distributed.compression import ef_compress_grads
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    remat: bool = True
+    compress_grads: bool = False   # int8 error-feedback on the DP reduce
+    compress_axis: str = "pod"
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig,
+                    train_cfg: TrainConfig,
+                    param_shardings: Params | None = None) -> Callable:
+    n_micro = train_cfg.num_microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch,
+                                         remat=train_cfg.remat)
+        return loss, metrics, grads
+
+    def constrain(tree):
+        # Pin the microbatch gradient accumulator to the parameter layout.
+        # Without this the scan carry is unconstrained and GSPMD replicates
+        # it — every microbatch then all-gathers full weight-shaped f32
+        # gradients (measured 6.7 TiB/device/step on llama4-400B; §Perf A1).
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, param_shardings)
+
+    def train_step(params: Params, opt_state: dict, batch: Params,
+                   ef_state: Params | None = None):
+        if n_micro > 1:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return (constrain(acc), loss_acc + loss), metrics
+
+            zeros = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (gsum, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, jnp.asarray(0.0, jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = loss_sum / n_micro
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        new_ef = ef_state
+        if train_cfg.compress_grads and ef_state is not None:
+            grads, new_ef = ef_compress_grads(grads, ef_state,
+                                              axis=train_cfg.compress_axis)
+
+        params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads,
+                                                    opt_state)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        if train_cfg.compress_grads and ef_state is not None:
+            return params, opt_state, new_ef, metrics
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    def eval_step(params: Params, batch: Params):
+        loss, metrics = model.loss_fn(params, batch, remat=False)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,11 @@
+"""Shared pytest configuration.
+
+NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py (and the
+subprocess in test_distributed.py) request placeholder device counts.
+"""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (subprocess compile/execute)")

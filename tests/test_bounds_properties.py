@@ -1,0 +1,143 @@
+"""Property tests (hypothesis) for the paper's Section-3 theory.
+
+The propositions are deterministic inequalities — they must hold for EVERY
+input vector, which is exactly what hypothesis probes.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, hadamard as hd
+from repro.core import massdiff as md
+
+jax.config.update("jax_enable_x64", False)
+
+
+def vec(d, lo=-100.0, hi=100.0):
+    return st.lists(
+        st.floats(lo, hi, allow_nan=False, allow_infinity=False, width=32),
+        min_size=d, max_size=d,
+    ).map(lambda v: np.asarray(v, np.float32))
+
+
+def _nonzero(x):
+    return float(np.max(np.abs(x))) > 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(vec(64))
+def test_prop31_full_vector_bound(xs):
+    if not _nonzero(xs):
+        return
+    x = jnp.asarray(xs)
+    xr = hd.fwht(x)
+    lhs = float(jnp.max(jnp.abs(xr)))
+    rhs = float(bounds.prop31_bound(x))
+    assert lhs <= rhs * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(vec(64), st.sampled_from([4, 8, 16, 32]))
+def test_prop32_block_bound(xs, b):
+    if not _nonzero(xs):
+        return
+    x = jnp.asarray(xs)
+    xr = hd.block_hadamard_transform(x, b)
+    lhs = float(jnp.max(jnp.abs(xr)))
+    rhs = float(bounds.prop32_bound(x, b))
+    assert lhs <= rhs * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(vec(64), st.sampled_from([(8, 2), (8, 4), (16, 2), (4, 4)]))
+def test_cor33_evolution(xs, bk):
+    b_small, k = bk
+    x = jnp.asarray(xs)
+    z_big = float(bounds.zeta(x, b_small * k))
+    z_small = float(bounds.cor33_rhs(x, b_small, k))
+    assert z_big <= z_small * (1 + 1e-4) + 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec(64))
+def test_delta_ranges(xs):
+    if not _nonzero(xs):
+        return
+    x = jnp.asarray(xs)
+    d = x.shape[-1]
+    delta = float(bounds.mass_concentration(x))
+    assert 1.0 / d - 1e-5 <= delta <= 1.0 + 1e-5
+    dp = float(bounds.energy_concentration(x))
+    assert 1.0 / math.sqrt(d) - 1e-4 <= dp <= 1.0 + 1e-4
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec(64))
+def test_sufficient_condition_guarantees_suppression(xs):
+    """δ < 1/√d ⇒ ‖XR‖∞ < ‖X‖∞ (the Prop-3.1 guarantee)."""
+    if not _nonzero(xs):
+        return
+    x = jnp.asarray(xs)
+    d = x.shape[-1]
+    delta = float(bounds.mass_concentration(x))
+    if delta < bounds.sufficient_threshold_full(d) * (1 - 1e-3):
+        ratio = float(bounds.suppression_ratio(x, hd.fwht(x)))
+        assert ratio < 1.0 + 1e-4
+
+
+def test_prop34_probabilistic_bound_monte_carlo():
+    """Rademacher-sign resampling violates the 1−ε bound at most ~ε often."""
+    rng = np.random.default_rng(0)
+    d, b, eps, trials = 128, 16, 0.05, 400
+    y = np.abs(rng.laplace(size=d)).astype(np.float32)
+    violations = 0
+    for _ in range(trials):
+        s = rng.choice([-1.0, 1.0], size=d).astype(np.float32)
+        x = jnp.asarray(s * y)
+        xr = hd.block_hadamard_transform(x, b)
+        lhs = float(jnp.max(jnp.abs(xr)))
+        rhs = float(bounds.prop34_bound(x, b, eps, tight=True))
+        violations += lhs > rhs
+    assert violations / trials <= eps  # sub-Gaussian bounds are conservative
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 32]))
+def test_massdiff_minimizes_prop32_bound_vs_identity(seed, b):
+    """Permuting by MassDiff never increases the Prop-3.2 bound on the
+    calibration mass profile (the quantity Alg. 1 greedily minimizes)."""
+    rng = np.random.default_rng(seed)
+    d = 128
+    calib = rng.laplace(size=(32, d)).astype(np.float32) * \
+        rng.uniform(0.1, 10.0, size=(1, d)).astype(np.float32)
+    mass = md.coordinate_mass(calib)
+    perm = md.massdiff(mass, b)
+    before = mass.reshape(-1, b).sum(-1).max()
+    after = mass[perm].reshape(-1, b).sum(-1).max()
+    assert after <= before * (1 + 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_permutations_are_bijections(seed):
+    rng = np.random.default_rng(seed)
+    d, b = 96, 16
+    calib = rng.standard_normal((8, d)).astype(np.float32)
+    for meth in ["identity", "random", "absmax", "zigzag", "massdiff"]:
+        p = md.make_permutation(meth, calib, b, seed=seed)
+        assert sorted(p.tolist()) == list(range(d)), meth
+
+
+def test_perm_matrix_convention():
+    rng = np.random.default_rng(3)
+    d = 24
+    perm = rng.permutation(d)
+    x = rng.standard_normal((5, d)).astype(np.float32)
+    P = md.perm_matrix(perm)
+    np.testing.assert_allclose(x @ P, x[:, perm], atol=0)
+    inv = md.invert(perm)
+    np.testing.assert_allclose(x[:, perm][:, inv], x, atol=0)

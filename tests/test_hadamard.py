@@ -1,0 +1,103 @@
+"""Hadamard construction + transform tests, including paper Tables 3/4."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hadamard as hd
+
+SMALL_ORDERS = [1, 2, 4, 8, 12, 16, 20, 28, 32, 36, 44, 64, 76, 128, 256, 300]
+ASSIGNED_DIMS = [504, 1024, 1280, 1408, 2048, 2816, 3072, 5120, 6144, 7168,
+                 8192, 9728, 12288, 14336, 19200]
+
+
+@pytest.mark.parametrize("n", SMALL_ORDERS)
+def test_construction_is_hadamard(n):
+    H = hd.hadamard(n)
+    if n >= 4:
+        assert hd.is_hadamard(H)
+    assert H.shape == (n, n)
+    assert set(np.unique(H)) <= {-1, 1}
+
+
+@pytest.mark.parametrize("d", ASSIGNED_DIMS)
+def test_assigned_dims_constructible(d):
+    assert hd.constructible(d), f"no Hadamard construction for assigned dim {d}"
+
+
+def test_nonconstructible_raises():
+    with pytest.raises(ValueError):
+        hd.hadamard(6)  # n % 4 != 0
+
+
+@pytest.mark.parametrize("d", [2, 8, 64, 512])
+def test_fwht_matches_sylvester(d):
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, d))
+    H = jnp.asarray(hd.sylvester(d).astype(np.float32)) / math.sqrt(d)
+    np.testing.assert_allclose(np.asarray(hd.fwht(x)), np.asarray(x @ H),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [12, 24, 28, 56, 96, 112, 1280])
+def test_nonpow2_transform_matches_dense(d):
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, d))
+    H = jnp.asarray(hd.hadamard(d).astype(np.float32)) / math.sqrt(d)
+    np.testing.assert_allclose(np.asarray(hd.hadamard_transform(x)),
+                               np.asarray(x @ H), atol=1e-4)
+
+
+@pytest.mark.parametrize("d,b", [(64, 16), (96, 12), (256, 32), (512, 128)])
+def test_block_transform_matches_kron(d, b):
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, d))
+    got = np.asarray(hd.block_hadamard_transform(x, b))
+    want = np.asarray(x @ hd.block_hadamard_matrix(d, b))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_transform_is_orthonormal():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 224))
+    y = hd.hadamard_transform(x)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+# ---- paper Tables 3 & 4 (exact numbers) -----------------------------------
+
+TABLE3 = [  # (d, b→ops for 32/128/512, full)
+    (8192, {32: 40960, 128: 57344, 512: 73728}, 106496),
+    (14336, {32: 71680, 128: 100352, 512: 129024}, 258048),
+    (6144, {32: 30720, 128: 43008, 512: 55296}, 86016),
+    (9728, {32: 48640, 128: 68096, 512: 87552}, 272384),
+    (12288, {32: 61440, 128: 86016, 512: 110592}, 184320),
+]
+
+
+@pytest.mark.parametrize("d,blocks,full", TABLE3)
+def test_table3_op_counts(d, blocks, full):
+    for b, want in blocks.items():
+        assert hd.ops_block(d, b) == want
+    assert hd.ops_full_vector(d) == full
+
+
+TABLE4 = [  # (d, matmul, butterfly+matmul, ours)
+    (14336, 205_520_896, 516_096, 258_048),
+    (3072, 9_437_184, 58_368, 39_936),
+    (6144, 37_748_736, 122_880, 86_016),
+    (9728, 94_633_984, 797_696, 272_384),
+    (12288, 150_994_944, 258_048, 184_320),
+]
+
+
+@pytest.mark.parametrize("d,mm,bfly,ours", TABLE4)
+def test_table4_op_counts(d, mm, bfly, ours):
+    assert hd.ops_dense_matmul(d) == mm
+    assert hd.ops_butterfly_matmul(d) == bfly
+    assert hd.ops_optimized(d) == ours
+
+
+def test_random_orthogonal_fallback():
+    q = hd.random_orthogonal(10, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(q @ q.T), np.eye(10), atol=1e-5)

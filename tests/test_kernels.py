@@ -1,0 +1,127 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.block_hadamard import block_hadamard
+from repro.kernels.hadamard_quant import hadamard_quant
+from repro.kernels.int4_matmul import int4_matmul
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -------------------- block_hadamard --------------------
+
+@pytest.mark.parametrize("m,d,b", [
+    (4, 64, 16), (32, 128, 32), (7, 256, 128), (100, 512, 512),
+    (16, 384, 96),  # non-pow2 block (Hadamard-12 base)
+    (1, 128, 16),   # single row
+    (300, 256, 256),  # rows not multiple of tile
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_hadamard_matches_ref(m, d, b, dtype):
+    x = (jax.random.normal(KEY, (m, d)) * 4).astype(dtype)
+    got = block_hadamard(x, b, interpret=True)
+    want = kref.block_hadamard_ref(x, b)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    atol = 1e-4 if dtype == jnp.float32 else 0.125
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_block_hadamard_3d_batch():
+    x = jax.random.normal(KEY, (3, 5, 128))
+    got = block_hadamard(x, 32, interpret=True)
+    want = kref.block_hadamard_ref(x, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_block_hadamard_is_involution_energy():
+    """Orthonormality: applying twice to H-symmetric blocks preserves norms."""
+    x = jax.random.normal(KEY, (10, 256))
+    y = block_hadamard(x, 64, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+# -------------------- hadamard_quant --------------------
+
+@pytest.mark.parametrize("m,d,b", [(16, 128, 32), (65, 256, 16), (8, 512, 128)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_hadamard_quant_matches_ref(m, d, b, bits):
+    x = jax.random.normal(KEY, (m, d)) * 3
+    gc, gs, gz = hadamard_quant(x, b, bits=bits, interpret=True)
+    wc, ws, wz = kref.hadamard_quant_ref(x, b, bits)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gz), np.asarray(wz), atol=1)
+    # codes may differ ±1 on rounding ties; compare dequantized values
+    deq_g = np.asarray(gs) * (np.asarray(gc, np.float32) + np.asarray(gz))
+    deq_w = np.asarray(ws) * (np.asarray(wc, np.float32) + np.asarray(wz))
+    np.testing.assert_allclose(deq_g, deq_w, atol=float(np.asarray(ws).max()))
+
+
+def test_hadamard_quant_dequant_error_bounded():
+    x = jax.random.normal(KEY, (32, 256))
+    c, s, z = hadamard_quant(x, 32, bits=4, interpret=True)
+    deq = np.asarray(s) * (np.asarray(c, np.float32) + np.asarray(z))
+    rot = np.asarray(kref.block_hadamard_ref(x, 32))
+    # max error ≤ step size (asym 4-bit: range/15)
+    step = (rot.max(-1) - rot.min(-1)) / 15
+    assert (np.abs(deq - rot).max(-1) <= step + 1e-5).all()
+
+
+# -------------------- int4 pack / matmul --------------------
+
+def test_pack_unpack_roundtrip():
+    codes = jax.random.randint(KEY, (64, 32), -8, 8, dtype=jnp.int8)
+    packed = kref.int4_pack(codes)
+    assert packed.shape == (32, 32) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(kref.int4_unpack(packed)),
+                                  np.asarray(codes))
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 32), (33, 128, 128), (4, 256, 64)])
+def test_int4_matmul_matches_ref(m, k, n):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    act_codes = jax.random.randint(k1, (m, k), 0, 16, dtype=jnp.int8)
+    act_scale = jax.random.uniform(k2, (m, 1), minval=0.01, maxval=0.2)
+    act_zero = jnp.round(jax.random.uniform(k3, (m, 1), minval=-8, maxval=0))
+    w_codes = jax.random.randint(k2, (k, n), -8, 8, dtype=jnp.int8)
+    w_packed = kref.int4_pack(w_codes)
+    w_scale = jax.random.uniform(k1, (n,), minval=0.01, maxval=0.1)
+    got = int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
+                      tm=16, tn=32, tk=64, interpret=True)
+    want = kref.int4_matmul_ref(act_codes, act_scale, act_zero, w_packed,
+                                w_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_int4_matmul_equals_float_path():
+    """End-to-end: integer GEMM == dequantize-then-matmul exactly."""
+    m, k, n = 16, 128, 64
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.2
+    # quantize
+    act_codes, s_a, z_a = kref.quantize_act_int_ref(x, 4)
+    s_w = jnp.max(jnp.abs(w), axis=0) / 7
+    w_codes = jnp.clip(jnp.round(w / s_w[None]), -7, 7).astype(jnp.int8)
+    w_packed = kref.int4_pack(w_codes)
+    got = int4_matmul(act_codes, s_a, z_a, w_packed, s_w,
+                      tm=16, tn=64, tk=128, interpret=True)
+    x_deq = s_a * (act_codes.astype(jnp.float32) + z_a)
+    w_deq = w_codes.astype(jnp.float32) * s_w[None]
+    want = x_deq @ w_deq
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ops_dispatch_reference_mode():
+    from repro.kernels import ops
+    x = jax.random.normal(KEY, (4, 128))
+    with ops.use_kernels(False):
+        y1 = ops.block_hadamard(x, 32)
+    y2 = ops.block_hadamard(x, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

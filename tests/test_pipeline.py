@@ -1,0 +1,171 @@
+"""End-to-end PTQ pipeline tests.
+
+The two central invariants:
+  1. *Function preservation*: with quantization disabled, the full transform
+     stack (norm folding + R₁/R₂ merging + P₃ permutation + R̃₃ pre-rotation
+     and its online inverse) leaves the model function unchanged.
+  2. *The paper's claim*: with INT4 W4A4, PeRQ (MassDiff) yields lower
+     output error than No-Permute at small block sizes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import pipeline as PL
+from repro.core.quantizers import QuantSpec
+from repro.models.transformer import build_model
+
+KEY = jax.random.PRNGKey(0)
+NOQ = QuantSpec(fmt="none")
+
+
+def _setup(arch, seed=0, **reduced_kw):
+    cfg = get_config(arch).reduced(**reduced_kw)
+    if cfg.uses_moe:
+        cfg = cfg.reduced(capacity_factor=cfg.n_experts / cfg.top_k,
+                          **reduced_kw)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _batch(cfg, key, batch=2, seq=32):
+    ks = jax.random.split(key, 3)
+    if cfg.frontend == "audio_frames":
+        return {"frames": jax.random.normal(ks[0], (batch, seq, 512)),
+                "labels": jnp.zeros((batch, seq), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        npatch = cfg.frontend_tokens
+        return {"patches": jax.random.normal(ks[0], (batch, npatch, 1024)),
+                "tokens": jax.random.randint(ks[1], (batch, seq - npatch),
+                                             0, cfg.vocab),
+                "labels": jnp.zeros((batch, seq - npatch), jnp.int32)}
+    return {"tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab),
+            "labels": jnp.zeros((batch, seq), jnp.int32)}
+
+
+TRANSFORM_ARCHS = ["llama3-1b", "qwen1.5-0.5b", "hubert-xlarge",
+                   "internvl2-2b", "deepseek-moe-16b", "mamba2-1.3b",
+                   "zamba2-1.2b"]
+
+
+@pytest.mark.parametrize("arch", TRANSFORM_ARCHS)
+def test_transforms_preserve_function(arch):
+    """No-quant pipeline (rotations+permutations merged, rounding off) must
+    reproduce the original logits to float tolerance."""
+    cfg, model, params = _setup(arch)
+    batch = _batch(cfg, KEY)
+    cal = [_batch(cfg, jax.random.PRNGKey(7))]
+    ptq_cfg = PL.PTQConfig(weight_spec=NOQ, act_spec=NOQ, block_size=16,
+                           permutation="massdiff", rotation="quarot",
+                           rounding="rtn")
+    res = PL.quantize_model(model, params, cal, ptq_cfg)
+    # disable runtime act-quant hooks but KEEP the online R̃₃ (its inverse
+    # is merged in w_down, so function preservation depends on it running)
+    hooks = dict(res.hooks)
+    hooks["act_in"] = None
+    hooks = {k: v for k, v in hooks.items() if v is not None}
+    qmodel = build_model(cfg, quant_hooks=hooks)
+
+    want = np.asarray(model.forward(params, batch), np.float32)
+    got = np.asarray(qmodel.forward(res.params, batch), np.float32)
+    # orthogonal transforms accumulate f32 roundoff over layers
+    scale = np.abs(want).max() + 1e-6
+    np.testing.assert_allclose(got / scale, want / scale, atol=2e-3)
+
+
+def test_perq_beats_no_permute_int4():
+    """Paper Table 1 trend at CPU scale: MassDiff < No-Permute output error
+    for small block sizes under INT4 W4A4."""
+    cfg, model, params = _setup("llama3-1b")
+    batch = _batch(cfg, KEY, batch=2, seq=64)
+    cal = [_batch(cfg, jax.random.PRNGKey(7), batch=2, seq=64)]
+    want = np.asarray(model.forward(params, batch), np.float32)
+
+    def err_for(permutation):
+        ptq = PL.PTQConfig(block_size=16, permutation=permutation,
+                           rotation="quarot", rounding="rtn")
+        res = PL.quantize_model(model, params, cal, ptq)
+        qmodel = PL.build_quantized_model(model, res)
+        got = np.asarray(qmodel.forward(res.params, batch), np.float32)
+        return float(np.mean((got - want) ** 2))
+
+    e_massdiff = err_for("massdiff")
+    e_identity = err_for("identity")
+    assert e_massdiff < e_identity, (e_massdiff, e_identity)
+
+
+def test_pipeline_reduces_prop32_bound():
+    """MassDiff must reduce max per-block ℓ₁ mass at every layer (the
+    quantity Prop 3.2 says governs post-rotation outliers)."""
+    cfg, model, params = _setup("llama3-1b")
+    cal = [_batch(cfg, jax.random.PRNGKey(7))]
+    ptq = PL.PTQConfig(block_size=16, permutation="massdiff",
+                       rotation="quarot", rounding="rtn")
+    res = PL.quantize_model(model, params, cal, ptq)
+    for entry in res.report["per_layer"]:
+        assert entry["max_block_l1_after"] <= \
+            entry["max_block_l1_before"] * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("name", ["perq_star", "perq_dagger", "mr_rtn",
+                                  "mr_gptq", "mr_qronos", "brq_spin",
+                                  "quarot"])
+def test_presets_run(name):
+    cfg, model, params = _setup("qwen1.5-0.5b")
+    batch = _batch(cfg, KEY)
+    cal = [_batch(cfg, jax.random.PRNGKey(7))]
+    ptq = PL.preset(name, cayley_steps=4)
+    res = PL.quantize_model(model, params, cal, ptq)
+    qmodel = PL.build_quantized_model(model, res)
+    logits = qmodel.forward(res.params, batch)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("fmt", ["int4", "fp4", "mxfp4"])
+def test_formats_run(fmt):
+    cfg, model, params = _setup("llama3-1b")
+    batch = _batch(cfg, KEY)
+    cal = [_batch(cfg, jax.random.PRNGKey(7))]
+    ptq = PL.PTQConfig(weight_spec=QuantSpec(fmt=fmt),
+                       act_spec=QuantSpec(fmt=fmt), block_size=32,
+                       permutation="massdiff", rotation="quarot",
+                       rounding="rtn")
+    res = PL.quantize_model(model, params, cal, ptq)
+    qmodel = PL.build_quantized_model(model, res)
+    logits = qmodel.forward(res.params, batch)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_pipeline_ordering_matches_paper():
+    """On a model with LLM-like outlier channels and adequate calibration,
+    the paper's ordering must hold:
+        rtn_only > mr_rtn > PeRQ*   (lower output MSE is better)
+    and PeRQ* at b=32 closes most of the gap to full-vector QuaRot."""
+    from repro.core.synthetic import inject_outlier_channels
+    cfg, model, params = _setup("llama3-1b")
+    params = inject_outlier_channels(params)
+    batch = _batch(cfg, jax.random.PRNGKey(9), batch=2, seq=64)
+    cal = [_batch(cfg, jax.random.PRNGKey(100 + i), batch=4, seq=128)
+           for i in range(4)]
+    want = np.asarray(model.forward(params, batch), np.float32)
+
+    def err(preset_name, **over):
+        res = PL.quantize_model(model, params, cal,
+                                PL.preset(preset_name, **over))
+        qm = PL.build_quantized_model(model, res)
+        got = np.asarray(qm.forward(res.params, batch), np.float32)
+        return float(np.mean((got - want) ** 2))
+
+    e_none = err("rtn_only")
+    e_mr = err("mr_rtn")
+    e_perq = err("perq_star")
+    e_full = err("quarot")
+    assert e_mr < e_none, (e_mr, e_none)
+    assert e_perq < e_mr, (e_perq, e_mr)
+    # PeRQ* at b=32 recovers most of the block→full-vector gap
+    assert e_perq < e_full * 1.25, (e_perq, e_full)

@@ -1,0 +1,104 @@
+"""Quantizer unit + property tests (INT4/INT8/FP4/MXFP4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as qz
+
+FP4_GRID = {0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0}
+
+
+def test_fp4_values_on_grid():
+    v = jnp.linspace(-10, 10, 4001)
+    q = np.asarray(qz.fp4_quantize(v, jnp.array(1.0)))
+    assert set(np.round(np.abs(q), 6).tolist()) <= FP4_GRID
+
+
+def test_fp4_exact_grid_points_are_fixed():
+    pts = jnp.asarray(sorted(FP4_GRID | {-g for g in FP4_GRID}))
+    q = qz.fp4_quantize(pts, jnp.array(1.0))
+    np.testing.assert_allclose(np.asarray(q), np.asarray(pts), atol=1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1e4, 1e4, allow_nan=False, width=32))
+def test_fp4_nearest_neighbor(v):
+    """fp4_quantize == LUT nearest neighbor (up to round-half-even ties)."""
+    s = 1.0
+    q = float(qz.fp4_quantize(jnp.array(v, jnp.float32), jnp.array(s)))
+    grid = np.asarray(sorted(FP4_GRID | {-g for g in FP4_GRID}))
+    clipped = np.clip(v, -6.0, 6.0)
+    best = grid[np.argmin(np.abs(grid - clipped))]
+    # ties between two grid points are allowed to round either way
+    assert abs(q - best) <= max(abs(grid - clipped).min() * 1.0001, 1e-6) or \
+        np.isclose(abs(q - clipped), abs(best - clipped), rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_int_quantize_error_bound(bits):
+    """Worst-case per-element error ≤ s/2 inside the clip range."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,)) * 2
+    s = jnp.max(jnp.abs(x)) / (2 ** (bits - 1) - 1)
+    q = qz.int_quantize(x, s, 0.0, bits)
+    assert float(jnp.max(jnp.abs(q - x))) <= float(s) / 2 + 1e-6
+
+
+@pytest.mark.parametrize("fmt", ["int4", "int8", "fp4", "mxfp4"])
+def test_act_quant_shape_dtype(fmt):
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 64), jnp.bfloat16)
+    y = qz.quantize_act(x, qz.QuantSpec(fmt=fmt))
+    assert y.shape == x.shape and y.dtype == x.dtype
+
+
+@pytest.mark.parametrize("fmt", ["int4", "fp4", "mxfp4"])
+def test_weight_quant_reduces_to_grid(fmt):
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+    wq = qz.quantize_weight(w, qz.QuantSpec(fmt=fmt), axis=0)
+    assert wq.shape == w.shape
+    # idempotence: quantizing a quantized weight is (nearly) a fixed point
+    wq2 = qz.quantize_weight(wq, qz.QuantSpec(fmt=fmt), axis=0)
+    assert float(jnp.linalg.norm(wq2 - wq)) <= 0.35 * float(jnp.linalg.norm(wq - w))
+
+
+def test_mse_scale_search_beats_absmax_scale():
+    """The Appendix-B linear search should not be worse than plain absmax."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (128, 16)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(4), (128, 16)))
+    bits = 4
+    s_search = qz.int_weight_scales_mse(w, bits, axis=0)
+    s_absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True) / (2 ** (bits - 1) - 1)
+    e_search = jnp.sum((qz.int_quantize(w, s_search, 0., bits) - w) ** 2)
+    e_absmax = jnp.sum((qz.int_quantize(w, s_absmax, 0., bits) - w) ** 2)
+    assert float(e_search) <= float(e_absmax) * 1.0001
+
+
+def test_mxfp4_group_scales_are_pow2():
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64)) * 100
+    q = qz.mxfp4_quantize(x, group=32)
+    g = np.asarray(q).reshape(4, 2, 32)
+    nz = np.abs(g[np.abs(g) > 0])
+    # every quantized magnitude = fp4_value · 2^k → log2(q / fp4val) integral
+    vals = np.asarray([0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+    ok = np.zeros_like(nz, dtype=bool)
+    for v in vals:
+        r = nz / v
+        ok |= np.isclose(np.log2(r), np.round(np.log2(r)), atol=1e-5)
+    assert ok.all()
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(qz.ste_round(x * 3.0)))(jnp.ones((4,)))
+    np.testing.assert_allclose(np.asarray(g), 3.0 * np.ones(4), atol=1e-6)
+
+
+def test_asym_act_quant_covers_range():
+    """Asymmetric per-token quant: min/max of each token map near themselves."""
+    x = jnp.asarray(np.random.default_rng(0).uniform(2.0, 9.0, (8, 64)),
+                    jnp.float32)  # strictly positive → asym must adapt zero
+    y = qz.quantize_act(x, qz.QuantSpec(fmt="int4"))
+    sym_scale = jnp.max(jnp.abs(x), -1, keepdims=True) / 7
+    y_sym = qz.int_quantize(x, sym_scale, 0.0, 4)
+    assert float(jnp.mean((y - x) ** 2)) < float(jnp.mean((y_sym - x) ** 2))

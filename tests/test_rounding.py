@@ -1,0 +1,77 @@
+"""GPTQ / Qronos rounding tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizers as qz
+from repro.core import rounding as rd
+
+
+def _setup(d_in=64, d_out=48, n_tok=512, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    # anisotropic activations (what makes GPTQ matter)
+    x = jax.random.normal(k1, (n_tok, d_in)) * (1 + jnp.arange(d_in) * 0.05)
+    w = jax.random.normal(k2, (d_in, d_out)) * 0.3
+    return x, w
+
+
+@pytest.mark.parametrize("fmt", ["int4", "fp4", "mxfp4"])
+def test_gptq_beats_rtn_on_layer_output(fmt):
+    x, w = _setup()
+    h = rd.hessian_from_activations(x)
+    spec = qz.QuantSpec(fmt=fmt)
+    e_rtn = jnp.linalg.norm(x @ rd.rtn(w, spec) - x @ w)
+    e_gptq = jnp.linalg.norm(x @ rd.gptq(w, h, spec) - x @ w)
+    assert float(e_gptq) < float(e_rtn)
+
+
+def test_gptq_weights_live_on_quant_grid():
+    x, w = _setup()
+    h = rd.hessian_from_activations(x)
+    spec = qz.QuantSpec(fmt="int4")
+    wq = rd.gptq(w, h, spec)
+    # re-quantizing with the same scales must be a fixed point
+    s = rd.row_scales(wq, spec)
+    wq2 = qz.int_quantize(wq, s, 0.0, 4)
+    np.testing.assert_allclose(np.asarray(wq2), np.asarray(wq), atol=2e-5)
+
+
+def test_qronos_reduces_to_gptq_without_cross_term():
+    x, w = _setup()
+    h = rd.hessian_from_activations(x)
+    spec = qz.QuantSpec(fmt="int4")
+    wq1 = rd.qronos(w, h, spec, c_qx=None)
+    wq2 = rd.gptq(w, h, spec, damp_sigma=1e-3)
+    np.testing.assert_allclose(np.asarray(wq1), np.asarray(wq2), atol=1e-6)
+
+
+def test_qronos_beats_gptq_with_quantized_inputs():
+    x, w = _setup(seed=1)
+    xq = qz.quantize_act(x, qz.QuantSpec(fmt="int4"))
+    hq = rd.hessian_from_activations(xq)
+    c = rd.cross_from_activations(xq, x)
+    spec = qz.QuantSpec(fmt="int4")
+    target = x @ w  # the full-precision function we want to preserve
+    e_gptq = jnp.linalg.norm(xq @ rd.gptq(w, hq, spec) - target)
+    e_qron = jnp.linalg.norm(xq @ rd.qronos(w, hq, spec, c_qx=c) - target)
+    assert float(e_qron) < float(e_gptq)
+
+
+def test_gptq_handles_dead_channels():
+    x, w = _setup()
+    x = x.at[:, 7].set(0.0)  # dead input channel
+    h = rd.hessian_from_activations(x)
+    wq = rd.gptq(w, h, qz.QuantSpec(fmt="int4"))
+    assert bool(jnp.all(jnp.isfinite(wq)))
+
+
+def test_gptq_act_order_matches_identity_on_isotropic_h():
+    """With H = I the error diffusion is a no-op: GPTQ == RTN exactly."""
+    _, w = _setup()
+    h = jnp.eye(w.shape[0]) * 100.0
+    spec = qz.QuantSpec(fmt="int4")
+    wq_gptq = rd.gptq(w, h, spec, act_order=False)
+    wq_rtn = rd.rtn(w, spec)
+    np.testing.assert_allclose(np.asarray(wq_gptq), np.asarray(wq_rtn),
+                               atol=2e-5)
