@@ -3,7 +3,11 @@ wall time on CPU; TPU wall-time comes from the roofline, not this host).
 
 Reports per-op bytes/FLOPs and the modeled v5e time for the block-Hadamard
 rotation and the fused rotate+quant kernel, plus the measured CPU time of
-the jnp reference (sanity anchor, not a perf claim).
+the jnp reference (sanity anchor, not a perf claim), and an end-to-end
+decode-step latency pair for the dispatched serving path — reference
+(`use_kernels(False)`) vs kernel dispatch — so the serving-path win (or,
+on this CPU host, the interpret-mode overhead) is recorded in the bench
+trajectory alongside the per-op numbers.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 HBM_BW = 819e9
@@ -53,6 +58,38 @@ def main(argv=None):
           f"{flops_rot},{max(t_mem_f,t_cmp):.1f},memory")
     saving = 1 - bytes_fused / bytes_unfused
     print(f"fusion_hbm_byte_saving,{saving:.3f}")
+    decode_step_bench()
+
+
+def decode_step_bench(iters: int = 3):
+    """ref-vs-dispatched-kernel decode-step latency on the smoke config.
+
+    Both paths run through `QuantizedDenseLM` (jit'd end to end); only the
+    `use_kernels` flag differs. On TPU the kernel column is the Mosaic
+    path; on CPU it is interpret mode, whose overhead this row makes
+    visible rather than hides.
+    """
+    from repro.configs.registry import get_config
+    from repro.models.transformer import build_model
+    from repro.serve.quantized import QuantizedDenseLM, pack_dense_params
+
+    cfg = get_config("llama3-1b").reduced()
+    model = build_model(cfg)
+    packed = pack_dense_params(model.init(jax.random.PRNGKey(0)), cfg)
+    qlm = QuantizedDenseLM(cfg, block_size=16)
+    tok = jnp.asarray([[7]], jnp.int32)
+    idx = jnp.asarray(3, jnp.int32)
+
+    print("serving_path,decode_step_us")
+    for label, enabled in (("ref", False), ("kernels", True)):
+        with kops.use_kernels(enabled):
+            cache = qlm.init_cache(1, 32)
+            qlm.decode_step(packed, tok, cache, idx)[0].block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out, _ = qlm.decode_step(packed, tok, cache, idx)
+                out.block_until_ready()
+        print(f"decode_{label},{(time.perf_counter() - t0) / iters * 1e6:.0f}")
 
 
 if __name__ == "__main__":

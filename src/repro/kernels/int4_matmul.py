@@ -27,6 +27,17 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["int4_matmul"]
 
 
+def _divisor_tile(dim: int, pref: int, *, multiple: int = 1) -> int:
+    """Largest divisor of `dim` that is ≤ `pref` and a multiple of
+    `multiple` — serving dims (head counts × head_dim, FFN widths) are not
+    always multiples of the preferred MXU tile."""
+    for t in range(min(pref, dim), multiple - 1, -1):
+        if dim % t == 0 and t % multiple == 0:
+            return t
+    raise ValueError(f"no tile ≤ {pref} (multiple of {multiple}) "
+                     f"divides {dim}")
+
+
 def _kernel(qa_ref, wp_ref, sa_ref, za_ref, sw_ref, colsum_ref, o_ref,
             acc_ref, *, n_k):
     k_idx = pl.program_id(2)
@@ -82,8 +93,8 @@ def int4_matmul(act_codes: jnp.ndarray, act_scale: jnp.ndarray,
     colsum = (jnp.sum(lo, axis=0) + jnp.sum(hi, axis=0)).reshape(1, n)
 
     tm = min(tm, max(8, m))
-    tn = min(tn, n)
-    tk = min(tk, k)
+    tn = _divisor_tile(n, tn)
+    tk = _divisor_tile(k, tk, multiple=2)
     pad_m = (-m) % tm
     if pad_m:
         act_codes = jnp.pad(act_codes, ((0, pad_m), (0, 0)))

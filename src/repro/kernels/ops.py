@@ -1,9 +1,18 @@
 """jit'd public entry points for the kernels, with backend dispatch.
 
-On TPU the Pallas kernels compile to Mosaic; everywhere else (this CPU
-container, debugging) they run in interpret mode or fall back to the jnp
-references. `use_kernels(False)` forces the reference path (used by the
-dry-run, where the XLA-level graph is what the roofline reads).
+This module is the *only* kernel API the serving path uses: on TPU the
+Pallas kernels compile to Mosaic; everywhere else (this CPU container,
+debugging) they run in interpret mode or fall back to the jnp references.
+`use_kernels(False)` forces the reference path (used by the dry-run, where
+the XLA-level graph is what the roofline reads).
+
+Entry points accept serving-path shapes directly: activations may carry
+leading batch/seq dims ([..., K] codes with [..., 1] per-token asymmetric
+scale/zero), and the packed-weight layout produced by `pack_int4_weights`
+is the one `serve.quantized` stores per layer (vmapped under `lax.scan`).
+The dispatch decision is made at trace time, so a `use_kernels(...)` scope
+wrapped around a `jax.jit` trace bakes the chosen path into the compiled
+function.
 """
 from __future__ import annotations
 
@@ -14,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .block_hadamard import _column_tile, rotation_operand
 from .block_hadamard import block_hadamard as _bh_kernel
 from .hadamard_quant import hadamard_quant as _hq_kernel
 from .int4_matmul import int4_matmul as _i4_kernel
@@ -23,8 +33,10 @@ __all__ = [
     "kernels_enabled",
     "block_hadamard",
     "hadamard_quant",
+    "quantize_act",
     "int4_matmul",
     "pack_int4_weights",
+    "infer_int4_scales",
 ]
 
 _STATE = {"enabled": True}
@@ -55,29 +67,103 @@ def block_hadamard(x: jnp.ndarray, b: int) -> jnp.ndarray:
     return _bh_kernel(x, b, interpret=not _on_tpu())
 
 
+def _rotate_mm(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """X·(I ⊗ H_b) as a dot against the block-diagonal rotation operand —
+    the same arithmetic the TPU kernel performs (DESIGN.md §3), in plain
+    XLA ops. Used by the reference serving path so `use_kernels(False)`
+    is bit-compatible with the interpret-mode kernel (the butterfly FWHT
+    in `ref.py` stays the *independent* oracle for the kernel tests)."""
+    d = x.shape[-1]
+    td = _column_tile(b, d)
+    h = rotation_operand(b, td, dtype=jnp.float32)
+    lead = x.shape[:-1]
+    xs = x.astype(jnp.float32).reshape(-1, d // td, td)
+    y = jax.lax.dot_general(xs, h,
+                            dimension_numbers=(((2,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return y.reshape(*lead, d)
+
+
 def hadamard_quant(x: jnp.ndarray, b: int, *, bits: int = 4):
-    """Fused rotate+quantize → (codes, scale, zero)."""
+    """Fused rotate+quantize → (codes, scale, zero); x may be [..., D]."""
     if not kernels_enabled():
-        return _ref.hadamard_quant_ref(x, b, bits)
+        return _ref.quantize_act_int_ref(_rotate_mm(x, b), bits)
     return _hq_kernel(x, b, bits=bits, interpret=not _on_tpu())
+
+
+def quantize_act(x: jnp.ndarray, bits: int = 4):
+    """Per-token asymmetric activation quantization → (codes, scale, zero).
+
+    Kernel path reuses the fused rotate+quantize kernel with block size 1
+    (identity rotation), so the row min/max walk stays in VMEM; reference
+    path is the jnp oracle.
+    """
+    if not kernels_enabled():
+        return _ref.quantize_act_int_ref(x, bits)
+    return _hq_kernel(x, 1, bits=bits, interpret=not _on_tpu())
 
 
 def int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
                 **kw) -> jnp.ndarray:
-    """True-integer W4A4 GEMM."""
+    """True-integer W4A4 GEMM; activations may carry leading dims.
+
+    act_codes [..., K] int8 with per-token asymmetric act_scale/act_zero
+    [..., 1]; w_packed [K/2, N] uint8 nibbles, w_scale [N] (or [1, N]) per
+    output channel. Returns [..., N] float32.
+    """
+    lead = act_codes.shape[:-1]
+    k = act_codes.shape[-1]
+    qa = act_codes.reshape(-1, k)
+    sa = act_scale.reshape(-1, 1)
+    za = act_zero.reshape(-1, 1)
     if not kernels_enabled():
-        return _ref.int4_matmul_ref(act_codes, act_scale, act_zero,
-                                    w_packed, w_scale)
-    return _i4_kernel(act_codes, act_scale, act_zero, w_packed, w_scale,
-                      interpret=not _on_tpu(), **kw)
+        out = _ref.int4_matmul_ref(qa, sa, za, w_packed, w_scale)
+    else:
+        out = _i4_kernel(qa, sa, za, w_packed, w_scale,
+                         interpret=not _on_tpu(), **kw)
+    return out.reshape(*lead, out.shape[-1])
 
 
-def pack_int4_weights(w: jnp.ndarray, scale: jnp.ndarray):
+def infer_int4_scales(w: jnp.ndarray) -> jnp.ndarray:
+    """Recover per-output-channel symmetric int4 scales from a [K, N] weight.
+
+    PTQ hands the serving packer weights that are *already rounded* to a
+    symmetric int4 grid k·s (k ∈ [-7, 7]), but the scale s itself is not
+    stored in the PTQ result. `absmax/7` only recovers s when some channel
+    code hits ±7 — GPTQ/Qronos error diffusion can leave a channel's max
+    code below 7, in which case absmax/7 silently re-grids the channel and
+    the integer path drifts from fake-quant. Searching s ∈ {absmax/m,
+    m = 7..1} for the minimum round-trip error recovers the exact grid for
+    every on-grid channel (m = max |code|) and degrades to absmax/7 for
+    channels that were never on a grid.
+    """
+    wf = w.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(wf), axis=0), 1e-12)      # [N]
+    ms = jnp.arange(7, 0, -1, dtype=jnp.float32)                    # prefer 7
+    cands = absmax[None, :] / ms[:, None]                           # [7, N]
+
+    def roundtrip_err(s):
+        q = jnp.clip(jnp.round(wf / s[None]), -7, 7) * s[None]
+        return jnp.sum(jnp.square(q - wf), axis=0)
+
+    errs = jax.vmap(roundtrip_err)(cands)                           # [7, N]
+    best = jnp.argmin(errs, axis=0)                                 # first min
+    return jnp.take_along_axis(cands, best[None], axis=0)[0]
+
+
+def pack_int4_weights(w: jnp.ndarray, scale: jnp.ndarray | None = None):
     """Quantize a [K, N] float weight symmetrically to int4 and pack.
 
-    Returns (packed uint8 [K/2, N], scale [1, N]). `scale` is per output
-    channel (e.g. from `int_weight_scales_mse`), already applied.
+    The one shared packer for the serving path and the kernel benchmarks —
+    vmap it over a leading layer axis to pack a whole `lax.scan` stack.
+    `scale` is per output channel ([N] or [1, N], e.g. from
+    `int_weight_scales_mse`); when None the grid is recovered from the
+    weights via `infer_int4_scales`. Returns {"packed": uint8 [K/2, N],
+    "scale": float32 [N]}.
     """
-    scale = scale.reshape(1, -1)
-    codes = jnp.clip(jnp.round(w / scale), -7, 7).astype(jnp.int8)
-    return _ref.int4_pack(codes), scale
+    wf = w.astype(jnp.float32)
+    if scale is None:
+        scale = infer_int4_scales(wf)
+    scale = scale.reshape(-1).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(wf / scale[None]), -7, 7).astype(jnp.int8)
+    return {"packed": _ref.int4_pack(codes), "scale": scale}

@@ -269,6 +269,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 jitted = jax.jit(encode, in_shardings=(pshard, bshard))
                 lowered = jitted.lower(aparams, specs["batch"])
         elif plan.kind == "decode" and quantized_serve:
+            from repro.kernels import ops as kops
             from repro.serve.quantized import QuantizedDenseLM, \
                 pack_dense_params
             qlm = QuantizedDenseLM(cfg, block_size=32)
@@ -281,7 +282,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
             tshard = SH.batch_shardings(mesh, {"t": specs["tokens"]})["t"]
 
             def qdecode(p, t, c, i):
-                return qlm.decode_step(p, t, c, i)
+                # force the jnp reference path: the roofline reads op-level
+                # FLOP/byte counts from the XLA graph, which interpret-mode
+                # Pallas calls would obscure
+                with kops.use_kernels(False):
+                    return qlm.decode_step(p, t, c, i)
 
             jitted = jax.jit(qdecode,
                              in_shardings=(qshard, tshard, cshard,

