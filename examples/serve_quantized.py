@@ -1,9 +1,28 @@
-"""Serve a PeRQ-quantized model with continuous batching.
+"""Serve a PeRQ-quantized model through the paged-KV serving engine.
 
 Demonstrates the serving half of the framework: quantize with PeRQ*, then
-run batched requests through the slot-based scheduler (per-slot KV cache
-indices; prompt prefill and generation interleave across slots), with the
-online block-Hadamard + W4A4 path live in every decode step.
+run batched requests through `repro.serve.engine` with the online
+block-Hadamard + W4A4 path live in every forward call.
+
+The serving engine
+------------------
+`ServeEngine` replaces the legacy dense-slot scheduler with three pieces:
+
+* **Paged KV cache** (`engine.pages`): KV lives in fixed-size pages in one
+  shared pool; each sequence holds a block table of page ids, allocated as
+  it grows and freed on completion. Pages store whatever the backend's
+  cache format needs — bf16 K/V, or int8/int4 codes *plus* the asymmetric
+  per-(position, head) scale/zero rows of the integer KV cache.
+* **Continuous batching + chunked prefill** (`engine.scheduler`): prompts
+  stream through `forward_chunk` several tokens per step instead of the
+  old one-token-per-step drip; decodes advance every generating sequence
+  in one batched call with per-slot fill positions; admission happens
+  whenever pages free up, under a per-step token budget that interleaves
+  prefill with decode. Per-request `SamplingParams` carry temperature and
+  length, with a fresh PRNG key split per step.
+* **Unified adapter** (`engine.adapter`): the same engine serves the bf16
+  model, the fake-quant PTQ output (shown here), and the packed-int4
+  `QuantizedDenseLM` — `as_servable(model, params)` picks the adapter.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -15,7 +34,8 @@ from repro.configs.registry import get_config
 from repro.core import pipeline as PL
 from repro.core.synthetic import inject_outlier_channels
 from repro.models.transformer import build_model
-from repro.serve.step import BatchScheduler, Request
+from repro.serve.engine import (EngineRequest, SamplingParams, ServeEngine,
+                                as_servable)
 
 cfg = get_config("qwen1.5-0.5b").reduced()
 model = build_model(cfg)
@@ -28,19 +48,18 @@ result = PL.quantize_model(model, params, calib,
                            PL.preset("perq_star", block_size=16))
 qmodel = PL.build_quantized_model(model, result)
 
+engine = ServeEngine(as_servable(qmodel, result.params, name="fake-quant"),
+                     n_pages=33, page_size=8, max_seqs=4, prefill_chunk=8)
 rng = np.random.default_rng(0)
-sched = BatchScheduler(qmodel, result.params, slots=4, max_len=64)
 for rid in range(6):
     prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
-    sched.submit(Request(rid=rid, prompt=prompt, max_new=8))
+    engine.submit(EngineRequest(rid=rid, prompt=prompt,
+                                sampling=SamplingParams(max_new=8)))
 
-steps = 0
-done = []
-while sched.queue or sched.active:
-    done.extend(sched.step())
-    steps += 1
-
-print(f"served {len(done)} requests in {steps} decode steps "
-      f"(continuous batching over 4 slots)")
+done = engine.run()
+print(f"served {len(done)} requests in {engine.n_steps} engine steps "
+      f"(paged KV over {engine.kv.allocator.capacity} pages, "
+      f"{engine.n_prefill_tokens} prefill + {engine.n_decode_tokens} "
+      f"decode tokens)")
 for r in sorted(done, key=lambda r: r.rid):
     print(f"  req {r.rid}: prompt {r.prompt} → generated {r.generated}")

@@ -1,11 +1,15 @@
-"""Serving launcher CLI: quantize (PeRQ) then serve with continuous
-batching.
+"""Serving launcher CLI: quantize (PeRQ) then serve through the paged-KV
+continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \\
         --reduced --preset perq_star --block-size 16 --requests 8
 
-`--integer-path` swaps in the packed-int4 integer execution engine
-(`repro.serve.quantized`, dense archs) with an optional int4/int8 KV cache.
+Every path runs batched through `repro.serve.engine.ServeEngine` (paged KV
+pool, chunked prefill, per-step admission): the bf16 model (`--no-quant`),
+the fake-quant PTQ output (default), and the packed-int4 integer engine
+(`--integer-path`, dense archs, optional `--kv-bits {4,8}` integer KV
+pages). `--legacy-scheduler` keeps the old dense-slot `BatchScheduler` for
+comparison (bf16/fake-quant only).
 """
 import argparse
 
@@ -17,7 +21,9 @@ from repro.configs.registry import ARCH_IDS, get_config
 from repro.core import pipeline as PL
 from repro.core.synthetic import inject_outlier_channels
 from repro.models.transformer import build_model
-from repro.serve.step import BatchScheduler, Request, make_decode_step
+from repro.serve.engine import (EngineRequest, SamplingParams, ServeEngine,
+                                as_servable, pages_for)
+from repro.serve.step import BatchScheduler, Request
 
 
 def main(argv=None):
@@ -31,10 +37,15 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--integer-path", action="store_true")
     ap.add_argument("--kv-bits", type=int, default=None, choices=[4, 8])
     ap.add_argument("--no-quant", action="store_true",
                     help="serve the bf16 model instead")
+    ap.add_argument("--legacy-scheduler", action="store_true",
+                    help="use the dense-slot BatchScheduler (no paging)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -57,37 +68,57 @@ def main(argv=None):
         print(f"quantized with {args.preset} (b={args.block_size})")
 
     rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab,
+                            size=int(rng.integers(3, 9))).tolist()
+               for _ in range(args.requests)]
+
+    if args.legacy_scheduler:
+        if args.integer_path:
+            raise SystemExit("--legacy-scheduler cannot drive the integer "
+                             "path; the paged engine serves it")
+        sched = BatchScheduler(smodel, sparams, slots=args.slots,
+                               max_len=args.max_len,
+                               temperature=args.temperature)
+        for rid, prompt in enumerate(prompts):
+            sched.submit(Request(rid=rid, prompt=prompt,
+                                 max_new=args.max_new))
+        done = sched.run()
+        for r in sorted(done, key=lambda r: r.rid):
+            print(f"req {r.rid}: {r.prompt} → {r.generated}")
+        return
+
     if args.integer_path:
         from repro.serve.quantized import QuantizedDenseLM, \
             pack_dense_params
         qlm = QuantizedDenseLM(cfg, block_size=args.block_size,
                                kv_bits=args.kv_bits)
-        packed = pack_dense_params(sparams, cfg)
-        dec = jax.jit(lambda p, t, c, i: qlm.decode_step(p, t, c, i))
-        cache = qlm.init_cache(1, args.max_len)
-        prompt = rng.integers(0, cfg.vocab, size=6).tolist()
-        toks, nxt = [], None
-        for i, t in enumerate(prompt):
-            logits, cache = dec(packed, jnp.asarray([[t]], jnp.int32),
-                                cache, jnp.asarray(i, jnp.int32))
-            nxt = int(jnp.argmax(logits[0]))
-        for j in range(args.max_new):
-            toks.append(nxt)
-            logits, cache = dec(packed, jnp.asarray([[nxt]], jnp.int32),
-                                cache, jnp.asarray(len(prompt) + j,
-                                                   jnp.int32))
-            nxt = int(jnp.argmax(logits[0]))
-        print(f"integer path (kv_bits={args.kv_bits}): "
-              f"prompt {prompt} → {toks}")
-        return
+        adapter = as_servable(qlm, pack_dense_params(sparams, cfg))
+        label = f"integer path (kv_bits={args.kv_bits})"
+    else:
+        adapter = as_servable(smodel, sparams,
+                              name="bf16" if args.no_quant else "fake-quant")
+        label = "bf16" if args.no_quant else "fake-quant"
 
-    sched = BatchScheduler(smodel, sparams, slots=args.slots,
-                           max_len=args.max_len)
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab,
-                              size=int(rng.integers(3, 9))).tolist()
-        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new))
-    done = sched.run()
+    # enough pool for every slot to hold its worst-case sequence (the
+    # larger of --max-len and the longest prompt + --max-new, which is
+    # what engine admission reserves), plus the reserved scratch page
+    per_seq = max([pages_for(args.max_len, args.page_size)]
+                  + [pages_for(len(p) + args.max_new, args.page_size)
+                     for p in prompts])
+    n_pages = args.slots * per_seq + 1
+    engine = ServeEngine(adapter, n_pages=n_pages, page_size=args.page_size,
+                         max_seqs=args.slots,
+                         prefill_chunk=args.prefill_chunk)
+    for rid, prompt in enumerate(prompts):
+        engine.submit(EngineRequest(
+            rid=rid, prompt=prompt,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    max_new=args.max_new)))
+    done = engine.run()
+    print(f"{label}: served {len(done)} requests over {args.slots} slots "
+          f"in {engine.n_steps} engine steps "
+          f"({engine.n_prefill_tokens} prefill + "
+          f"{engine.n_decode_tokens} decode tokens)")
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: {r.prompt} → {r.generated}")
 

@@ -266,6 +266,16 @@ def attention(x: jnp.ndarray, p: Params, spec: AttnSpec, *,
             out = jnp.einsum("bkgqs,bskd->bqkgd", probs,
                              v_all.astype(jnp.float32))
             out = out.reshape(b, 1, h, dh).astype(x.dtype)
+        elif s <= spec.chunk_q and s_k <= spec.chunk_kv:
+            # short chunked-prefill block (the serving engine's common
+            # case): the flash path would pad q/kv to the 2048-wide chunk
+            # tiles, turning a 4-token chunk into a 2048² attention — the
+            # dense path with a query offset is exact and ~chunk²/s·s_k
+            # cheaper. Stale cache rows beyond the fill point sit at
+            # positions > every query position, so the causal mask hides
+            # them just as the flash path's validity mask does.
+            out = _dense_attention(q, k_all, v_all, causal=spec.causal,
+                                   q_offset=cache_index)
         else:
             out = _chunked_attention(q, k_all, v_all, causal=spec.causal,
                                      chunk_q=spec.chunk_q,

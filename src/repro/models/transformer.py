@@ -371,15 +371,28 @@ class Model:
         logits = x @ params["lm_head"].astype(self.cdt)
         return logits[:, 0], new_caches
 
-    def decode_step(self, params: Params, tokens: jnp.ndarray,
-                    caches: Params, index: jnp.ndarray):
-        """One decode step. tokens: [B, 1]; index: scalar int32 fill pos."""
+    def forward_chunk(self, params: Params, tokens: jnp.ndarray,
+                      caches: Params, index: jnp.ndarray):
+        """Token chunk [B, S] at fill position `index` → per-position
+        logits [B, S, V] + updated caches.
+
+        The serving-engine entry point: S == 1 with a vector index is a
+        per-slot continuous-batching decode step; S > 1 with a scalar
+        index is one chunk of an incremental (chunked) prefill, causal
+        within the chunk and attending to everything already cached.
+        """
         x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
         x = shard_act(x, ("batch", "seq", "embed"))
         x, new_caches = self._run_layers(params, x, caches=caches,
                                          cache_index=index)
         x = L.apply_norm(x, params["final_norm"], self.cfg.norm)
         logits = x @ params["lm_head"].astype(self.cdt)
+        return logits, new_caches
+
+    def decode_step(self, params: Params, tokens: jnp.ndarray,
+                    caches: Params, index: jnp.ndarray):
+        """One decode step. tokens: [B, 1]; index: scalar int32 fill pos."""
+        logits, new_caches = self.forward_chunk(params, tokens, caches, index)
         return logits[:, 0], new_caches
 
 

@@ -1,0 +1,17 @@
+"""Paged-KV continuous-batching serving engine.
+
+Unifies the three execution paths — bf16, fake-quant (PTQ hooks), and
+packed-int4 integer serving — behind one `ServableModel` adapter, a paged
+KV cache (`pages`), and a chunked-prefill continuous-batching scheduler
+(`scheduler`). See each module's docstring for the design.
+"""
+from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
+                      as_servable)
+from .pages import PageAllocator, PagedKVCache, pages_for
+from .scheduler import EngineRequest, SamplingParams, ServeEngine
+
+__all__ = [
+    "ServableModel", "DenseModelAdapter", "IntegerModelAdapter",
+    "as_servable", "PageAllocator", "PagedKVCache", "pages_for",
+    "EngineRequest", "SamplingParams", "ServeEngine",
+]

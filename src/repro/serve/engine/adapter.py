@@ -1,0 +1,106 @@
+"""Unified model adapter: one `ServableModel` protocol for every path.
+
+The engine serves three execution paths through one interface:
+
+  * the bf16 `repro.models.transformer.Model`,
+  * the fake-quant model from `pipeline.build_quantized_model` (the same
+    `Model` class with PTQ hooks installed — quantization error included,
+    weights stored dequantized),
+  * the packed-int4 `repro.serve.quantized.QuantizedDenseLM` (true integer
+    arithmetic, optional int8/int4 KV cache).
+
+All three expose `init_cache` (which doubles as the page-pool constructor:
+batch axis = page axis) and `forward_chunk(params, tokens, cache, index)` —
+per-position logits for a [B, S] token chunk written at fill position
+`index` (scalar, or [B] per-slot vector when S == 1). The adapter wraps
+that pair, normalises cache dtype handling, and jits the step end to end,
+so `scheduler.ServeEngine` never branches on which backend runs underneath.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.quantized import QuantizedDenseLM
+
+Params = dict[str, Any]
+
+
+@runtime_checkable
+class ServableModel(Protocol):
+    """What the paged engine needs from an execution path."""
+
+    cfg: Any
+    params: Params
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        """KV cache pytree with leading [n_layers, batch, max_len, ...]
+        leaves. The engine calls this with (n_pages, page_size) to build
+        the page pool."""
+        ...
+
+    def forward_chunk(self, params: Params, tokens: jnp.ndarray,
+                      cache: Params, index: jnp.ndarray):
+        """[B, S] tokens at fill position(s) `index` → ([B, S, V] logits,
+        updated cache). `params` is passed explicitly (usually
+        `adapter.params`) so the engine's fused jits trace the weights as
+        arguments, not as per-executable constants."""
+        ...
+
+
+class _AdapterBase:
+    name: str
+
+    def __init__(self, cfg, params: Params):
+        if cfg.family not in ("dense", "vlm"):
+            raise ValueError(
+                f"paged serving engine requires position-indexed attention "
+                f"caches (dense/vlm family), got {cfg.family!r}")
+        if cfg.frontend is not None:
+            raise ValueError("paged serving engine serves token LMs only")
+        self.cfg = cfg
+        self.params = params
+
+
+class DenseModelAdapter(_AdapterBase):
+    """bf16 or fake-quant `Model` (the hooks ride along transparently)."""
+
+    def __init__(self, model, params: Params, *, name: str = "bf16",
+                 cache_dtype=jnp.float32):
+        super().__init__(model.cfg, params)
+        self.model = model
+        self.name = name
+        self.cache_dtype = cache_dtype
+        self._forward = jax.jit(model.forward_chunk)
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return self.model.init_cache(batch, max_len, dtype=self.cache_dtype)
+
+    def forward_chunk(self, params, tokens, cache, index):
+        return self._forward(params, tokens, cache,
+                             jnp.asarray(index, jnp.int32))
+
+
+class IntegerModelAdapter(_AdapterBase):
+    """Packed-int4 `QuantizedDenseLM` (params = packed weights)."""
+
+    def __init__(self, qlm: QuantizedDenseLM, packed_params: Params):
+        super().__init__(qlm.cfg, packed_params)
+        self.qlm = qlm
+        self.name = f"int4_kv{qlm.kv_bits or 'bf16'}"
+
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        return self.qlm.init_cache(batch, max_len)
+
+    def forward_chunk(self, params, tokens, cache, index):
+        # QuantizedDenseLM jits internally (per kernels-enabled state)
+        return self.qlm.forward_chunk(params, tokens, cache, index)
+
+
+def as_servable(model, params: Params, **kw) -> ServableModel:
+    """Wrap any supported execution path in its engine adapter."""
+    if isinstance(model, QuantizedDenseLM):
+        return IntegerModelAdapter(model, params)
+    return DenseModelAdapter(model, params, **kw)

@@ -1,0 +1,161 @@
+"""Paged KV cache: fixed-size pages, per-sequence block tables, gather/scatter.
+
+Instead of one dense `[slots, max_len]` KV region per slot, the engine owns a
+single device-side *page pool* per KV leaf — shape `[n_layers, n_pages,
+page_size, ...]` — and a host-side block table per sequence mapping logical
+positions to pages. Pages are allocated lazily as a sequence grows and freed
+on completion, so pool HBM is shared across sequences of very different
+lengths (the vLLM PagedAttention memory model).
+
+The pool is format-agnostic: it is built by calling the adapter's
+`init_cache(n_pages, page_size)` — the page axis *is* the batch axis — so
+the same machinery pages the bf16 cache ({k, v}) and the asymmetric
+per-(position, head) int8/int4 KV cache ({k, v, k_scale, v_scale, k_zero, v_zero}): integer
+pages carry their codes *and* their scale/zero rows.
+
+Per step the engine gathers each active sequence's pages into a contiguous
+slab `[n_layers, B, P·page_size, ...]` (positions in the slab coincide with
+absolute positions, so RoPE and causal masks need no translation), runs the
+backend forward on it, and scatters only the newly written rows back into
+the pool. On TPU the gather lowers to a dynamic-gather over the page axis;
+fusing it into a Pallas paged-attention kernel is a ROADMAP follow-on — the
+arithmetic on the gathered slab already runs on the `repro.kernels.ops`
+dispatch layer, so that fusion changes data movement only.
+
+Page 0 is reserved as a scratch page: padded batch rows (inactive slots) and
+padded block-table entries point at it, so their masked reads and dead
+writes can never touch a live sequence's KV.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+SCRATCH_PAGE = 0
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold `n_tokens` KV rows."""
+    return -(-n_tokens // page_size)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over pool pages (page 0 reserved)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("pool needs at least 2 pages (page 0 is scratch)")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, SCRATCH_PAGE, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (excludes the scratch page)."""
+        return self.n_pages - 1
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise MemoryError(f"page pool exhausted: need {n}, "
+                              f"free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pages: list[int]):
+        for p in pages:
+            if p == SCRATCH_PAGE or p in self._free or p >= self.n_pages:
+                raise ValueError(f"double/invalid free of page {p}")
+        self._free.extend(pages)
+
+
+@jax.jit
+def gather_pages(pool: Params, block_tables: jnp.ndarray) -> Params:
+    """Gather pages into contiguous per-sequence slabs.
+
+    pool leaves: [n_layers, n_pages, page_size, ...]
+    block_tables: [B, P] int32 page ids (pad entries = SCRATCH_PAGE)
+    returns leaves: [n_layers, B, P·page_size, ...]
+    """
+    b, p = block_tables.shape
+
+    def g(leaf):
+        s = jnp.take(leaf, block_tables.reshape(-1), axis=1)
+        return s.reshape(leaf.shape[0], b, p * leaf.shape[2], *leaf.shape[3:])
+
+    return jax.tree.map(g, pool)
+
+
+@jax.jit
+def scatter_decode_rows(pool: Params, slab: Params, fill_pos: jnp.ndarray,
+                        page_ids: jnp.ndarray, offsets: jnp.ndarray) -> Params:
+    """Write each slot's newly decoded KV row back into its page.
+
+    Extracts row `fill_pos[i]` of slot i from every slab leaf and stores it
+    at (page_ids[i], offsets[i]) in the pool. Padded slots point at the
+    scratch page, so their (duplicate) writes are harmless.
+    """
+    rows = jnp.arange(fill_pos.shape[0])
+
+    def upd(p, s):
+        new = s[:, rows, fill_pos]                 # [n_layers, B, ...]
+        return p.at[:, page_ids, offsets].set(new.astype(p.dtype))
+
+    return jax.tree.map(upd, pool, slab)
+
+
+@jax.jit
+def scatter_prefill_rows(pool: Params, slab: Params, positions: jnp.ndarray,
+                         page_ids: jnp.ndarray,
+                         offsets: jnp.ndarray) -> Params:
+    """Write a prefill chunk's KV rows (single sequence, slab batch row 0)
+    back into its pages: slab positions `positions[j]` land at
+    (page_ids[j], offsets[j])."""
+
+    def upd(p, s):
+        new = s[:, 0, positions]                   # [n_layers, S, ...]
+        return p.at[:, page_ids, offsets].set(new.astype(p.dtype))
+
+    return jax.tree.map(upd, pool, slab)
+
+
+class PagedKVCache:
+    """Pool + allocator + per-sequence block tables for one served model."""
+
+    def __init__(self, pool: Params, n_pages: int, page_size: int):
+        self.pool = pool
+        self.page_size = page_size
+        self.allocator = PageAllocator(n_pages)
+        self.tables: dict[int, list[int]] = {}
+
+    def open(self, rid: int):
+        if rid in self.tables:
+            raise ValueError(f"sequence {rid} already open")
+        self.tables[rid] = []
+
+    def ensure(self, rid: int, n_tokens: int):
+        """Grow `rid`'s block table to cover `n_tokens` positions."""
+        table = self.tables[rid]
+        need = pages_for(n_tokens, self.page_size) - len(table)
+        if need > 0:
+            table.extend(self.allocator.alloc(need))
+
+    def release(self, rid: int):
+        self.allocator.free(self.tables.pop(rid))
+
+    def page_of(self, rid: int, position: int) -> tuple[int, int]:
+        """(page id, in-page offset) holding `position` of sequence `rid`."""
+        return (self.tables[rid][position // self.page_size],
+                position % self.page_size)
+
+    def block_table_array(self, rids: list[int], n_cols: int) -> jnp.ndarray:
+        """[len(rids), n_cols] int32 table, short rows padded with scratch."""
+        bt = [(self.tables[r] if r is not None else [])[:n_cols] for r in rids]
+        bt = [row + [SCRATCH_PAGE] * (n_cols - len(row)) for row in bt]
+        return jnp.asarray(bt, jnp.int32)

@@ -1,0 +1,315 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+Scheduling model (one `step()` = one engine iteration):
+
+  1. **Admission** — requests are admitted whenever a sequence slot is free
+     and the page allocator can cover the request's worst case
+     (`pages_for(prompt + max_new)`); reservation-based admission means a
+     running sequence can never hit an out-of-pages fault mid-decode.
+  2. **Decode** — every generating sequence advances one token in a single
+     batched `forward_chunk` call with per-slot fill positions (vector
+     cache index). The batch is padded to `max_seqs` rows pointing at the
+     scratch page, so batch shape — and hence the jit cache — is fixed.
+  3. **Chunked prefill** — whatever remains of the per-step token budget
+     goes to prompt processing, `prefill_chunk` tokens at a time through
+     the same `forward_chunk` entry (causal within the chunk, scalar fill
+     index), instead of the legacy one-token-per-step prompt drip. Chunks
+     are padded to the next power of two so prefill shapes stay bounded;
+     padded tail rows are computed but scatter to the scratch page, so
+     they never reach a live page.
+
+Sampling threads one PRNG key per engine step (split per request batch), so
+`temperature > 0` is genuinely stochastic — per-request `SamplingParams`
+pick greedy vs temperature sampling row by row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+from . import pages as PG
+from .adapter import ServableModel
+from .pages import PagedKVCache, pages_for
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@jax.jit
+def _sample_tokens(key, logits, temps):
+    """One fused device call: greedy rows where temp == 0, categorical
+    (logits/temp) elsewhere."""
+    greedy = jnp.argmax(logits, axis=-1)
+    scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    """Per-request sampling: temperature 0 → greedy argmax."""
+    temperature: float = 0.0
+    max_new: int = 8
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: int
+    prompt: list[int]
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    # per generated token: float32 logits row (only when record_logits)
+    step_logits: list[np.ndarray] = dataclasses.field(default_factory=list)
+    # --- engine-internal state ---
+    n_cached: int = 0          # KV rows already written for this sequence
+    next_token: int | None = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.sampling.max_new
+
+
+class ServeEngine:
+    """Paged-KV continuous-batching engine over any `ServableModel`."""
+
+    def __init__(self, adapter: ServableModel, *, n_pages: int,
+                 page_size: int = 16, max_seqs: int = 4,
+                 prefill_chunk: int = 8, token_budget: int | None = None,
+                 seed: int = 0, record_logits: bool = False):
+        self.adapter = adapter
+        self.max_seqs = max_seqs
+        self.prefill_chunk = prefill_chunk
+        self.token_budget = token_budget or max(max_seqs, prefill_chunk)
+        self.record_logits = record_logits
+        self.kv = PagedKVCache(adapter.init_cache(n_pages, page_size),
+                               n_pages, page_size)
+        self.queue: list[EngineRequest] = []
+        self.prefilling: list[EngineRequest] = []
+        self.decoding: list[EngineRequest] = []
+        self._committed: dict[int, int] = {}   # rid → reserved page count
+        self._key = jax.random.PRNGKey(seed)
+        # jit cache for the fused phase dispatches, keyed on the kernels
+        # flag (mirrors QuantizedDenseLM._jitted)
+        self._jit_cache: dict = {}
+        # counters for benchmarks / accounting tests
+        self.n_steps = 0
+        self.n_prefill_tokens = 0
+        self.n_decode_tokens = 0
+
+    # ------------------------------------------------------------------
+    # bookkeeping
+    # ------------------------------------------------------------------
+
+    @property
+    def active(self) -> list[EngineRequest]:
+        return self.prefilling + self.decoding
+
+    def submit(self, req: EngineRequest):
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if req.sampling.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if req.n_cached or req.generated:
+            raise ValueError(f"request {req.rid} carries stale engine "
+                             "state; submit a fresh EngineRequest")
+        if any(req.rid == r.rid for r in self.queue + self.active):
+            raise ValueError(f"rid {req.rid} already queued or active")
+        need = pages_for(len(req.prompt) + req.sampling.max_new,
+                         self.kv.page_size)
+        if need > self.kv.allocator.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages; pool capacity is "
+                f"{self.kv.allocator.capacity}")
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.max_seqs:
+            req = self.queue[0]
+            need = pages_for(len(req.prompt) + req.sampling.max_new,
+                             self.kv.page_size)
+            if sum(self._committed.values()) + need \
+                    > self.kv.allocator.capacity:
+                return           # head-of-line blocks until pages free up
+            self.queue.pop(0)
+            self.kv.open(req.rid)     # before committing: if this raises,
+            self._committed[req.rid] = need   # no reservation leaks
+            self.prefilling.append(req)
+
+    def _finish(self, req: EngineRequest):
+        self.kv.release(req.rid)
+        del self._committed[req.rid]
+
+    def _fused(self, name: str, impl):
+        """One fused device dispatch per phase: gather → forward →
+        scatter → sample (plus the PRNG split) trace into a single jit'd
+        call, so per-step host overhead stays flat as the model grows.
+        The pool is donated — a pool sized to fill HBM must not need a
+        second copy live across the in-place page update. Compiled once
+        per (phase, kernels-enabled) pair with the flag re-pinned inside
+        the traced body, so `use_kernels(...)` scopes keep selecting the
+        path they request instead of replaying the first-traced one."""
+        key = (name, kops.kernels_enabled())
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            enabled = key[1]
+
+            def wrapped(*args):
+                with kops.use_kernels(enabled):
+                    return impl(*args)
+
+            fn = self._jit_cache[key] = jax.jit(wrapped, donate_argnums=(0,))
+        return fn
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def _decode_impl(self, pool, params, key, bt, tokens, fill, page_ids,
+                     offsets, temps):
+        slab = PG.gather_pages(pool, bt)
+        logits, slab = self.adapter.forward_chunk(params, tokens, slab, fill)
+        pool = PG.scatter_decode_rows(pool, slab, fill, page_ids, offsets)
+        key, sub = jax.random.split(key)
+        lg = logits[:, 0].astype(jnp.float32)
+        return pool, key, lg, _sample_tokens(sub, lg, temps)
+
+    def _decode_once(self) -> list[EngineRequest]:
+        batch = self.decoding
+        b = self.max_seqs
+        for req in batch:
+            self.kv.ensure(req.rid, req.n_cached + 1)
+        n_cols = _next_pow2(max(
+            pages_for(r.n_cached + 1, self.kv.page_size) for r in batch))
+        rids = [r.rid for r in batch] + [None] * (b - len(batch))
+        bt = self.kv.block_table_array(rids, n_cols)
+        tokens = jnp.asarray(
+            [[r.next_token] for r in batch] + [[0]] * (b - len(batch)),
+            jnp.int32)
+        fill = jnp.asarray([r.n_cached for r in batch]
+                           + [0] * (b - len(batch)), jnp.int32)
+        targets = [self.kv.page_of(r.rid, r.n_cached) for r in batch] \
+            + [(PG.SCRATCH_PAGE, 0)] * (b - len(batch))
+        page_ids = jnp.asarray([t[0] for t in targets], jnp.int32)
+        offsets = jnp.asarray([t[1] for t in targets], jnp.int32)
+
+        temps = jnp.asarray([r.sampling.temperature for r in batch]
+                            + [0.0] * (b - len(batch)), jnp.float32)
+        self.kv.pool, self._key, logits, toks = self._fused(
+            "decode", self._decode_impl)(
+            self.kv.pool, self.adapter.params, self._key, bt, tokens, fill,
+            page_ids, offsets, temps)
+        toks = np.asarray(toks)
+        finished = []
+        for i, req in enumerate(list(batch)):
+            req.n_cached += 1
+            req.generated.append(int(toks[i]))
+            req.next_token = int(toks[i])
+            if self.record_logits:
+                req.step_logits.append(np.asarray(logits[i], np.float32))
+            self.n_decode_tokens += 1
+            if req.done:
+                self.decoding.remove(req)
+                self._finish(req)
+                finished.append(req)
+        return finished
+
+    # ------------------------------------------------------------------
+    # chunked prefill
+    # ------------------------------------------------------------------
+
+    def _prefill_impl(self, pool, params, key, bt, tokens, start, positions,
+                      page_ids, offsets, last, temp):
+        slab = PG.gather_pages(pool, bt)
+        logits, slab = self.adapter.forward_chunk(params, tokens, slab, start)
+        # padded tail rows are computed too (their queries may attend the
+        # garbage keys the same forward wrote for earlier padding tokens,
+        # so their outputs are meaningless and discarded); their scatter
+        # targets are the scratch page, so only real rows reach live pages
+        pool = PG.scatter_prefill_rows(pool, slab, positions, page_ids,
+                                       offsets)
+        key, sub = jax.random.split(key)
+        lg = jax.lax.dynamic_index_in_dim(logits, last, axis=1,
+                                          keepdims=False)[0]
+        lg = lg.astype(jnp.float32)
+        return pool, key, lg, _sample_tokens(sub, lg[None], temp)[0]
+
+    def _prefill_once(self, budget: int) -> tuple[int, list[EngineRequest]]:
+        """Advance the head-of-line prefill by up to `budget` prompt
+        tokens; returns (tokens consumed, requests finished)."""
+        req = self.prefilling[0]
+        start = req.n_cached
+        real = min(self.prefill_chunk, budget, len(req.prompt) - start)
+        padded = _next_pow2(real)
+        self.kv.ensure(req.rid, start + real)
+        n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
+        bt = self.kv.block_table_array([req.rid], n_cols)
+
+        # every device-side shape depends only on (padded, n_cols), both
+        # powers of two, so prefill compiles a bounded set of variants;
+        # `last` (= real - 1) rides along as a traced scalar
+        chunk = req.prompt[start:start + real] + [0] * (padded - real)
+        positions = jnp.arange(start, start + padded, dtype=jnp.int32)
+        targets = [self.kv.page_of(req.rid, p) for p in range(
+            start, start + real)] + [(PG.SCRATCH_PAGE, 0)] * (padded - real)
+        self.kv.pool, self._key, last, tok = self._fused(
+            "prefill", self._prefill_impl)(
+            self.kv.pool, self.adapter.params, self._key, bt,
+            jnp.asarray([chunk], jnp.int32), jnp.asarray(start, jnp.int32),
+            positions,
+            jnp.asarray([t[0] for t in targets], jnp.int32),
+            jnp.asarray([t[1] for t in targets], jnp.int32),
+            jnp.asarray(real - 1, jnp.int32),
+            jnp.asarray([req.sampling.temperature], jnp.float32))
+
+        req.n_cached = start + real
+        self.n_prefill_tokens += real
+        finished = []
+        if req.n_cached == len(req.prompt):
+            # prompt fully cached: the fused call already sampled the
+            # first generated token from the last real position's logits
+            self.prefilling.remove(req)
+            req.generated.append(int(tok))
+            req.next_token = int(tok)
+            if self.record_logits:
+                req.step_logits.append(np.asarray(last, np.float32))
+            if req.done:
+                self._finish(req)
+                finished.append(req)
+            else:
+                self.decoding.append(req)
+        return real, finished
+
+    # ------------------------------------------------------------------
+    # driver
+    # ------------------------------------------------------------------
+
+    def step(self) -> list[EngineRequest]:
+        """One engine iteration; returns requests that completed."""
+        self._admit()
+        finished = []
+        budget = self.token_budget
+        if self.decoding:
+            budget -= len(self.decoding)
+            finished.extend(self._decode_once())
+        while budget > 0 and self.prefilling:
+            used, fin = self._prefill_once(budget)
+            budget -= used
+            finished.extend(fin)
+        self.n_steps += 1
+        return finished
+
+    def run(self) -> list[EngineRequest]:
+        done = []
+        while self.queue or self.active:
+            done.extend(self.step())
+        return done

@@ -143,6 +143,18 @@ class QuantizedDenseLM:
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (self.cfg.n_layers, *a.shape)), one)
 
+    @staticmethod
+    def _write_rows(buf, val, index):
+        """Update `buf` [B, L, ...] with `val` [B, S, ...] at fill position
+        `index` — a scalar (all rows at the same offset, any S) or a [B]
+        vector (per-slot offsets, S == 1: the continuous-batching decode
+        case, mirroring the per-slot path in `models.layers.attention`)."""
+        if jnp.ndim(index) == 1:
+            rows = jnp.arange(buf.shape[0])
+            return buf.at[rows, index].set(val[:, 0].astype(buf.dtype))
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, index, 0, 0))
+
     def _cache_write(self, cache, k, v, index):
         """Write new K/V rows at positions [index, index+S) (bf16, or
         asymmetric integer codes per kv_bits with per-(position, head)
@@ -150,11 +162,8 @@ class QuantizedDenseLM:
         (the rotation is applied after dequantization in `_block`); the
         bf16 cache stores K already rotated."""
         if self.kv_bits is None:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, index, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, index, 0, 0))
-            return {"k": ck, "v": cv}
+            return {"k": self._write_rows(cache["k"], k, index),
+                    "v": self._write_rows(cache["v"], v, index)}
         bits = self.kv_bits
         levels = 2 ** bits - 1
         # codes are stored offset by 2^(bits-1) so the unsigned range fits
@@ -182,8 +191,7 @@ class QuantizedDenseLM:
         for name, val in (("k", kq), ("v", vq),
                           ("k_scale", ks), ("v_scale", vs),
                           ("k_zero", kz), ("v_zero", vz)):
-            out[name] = jax.lax.dynamic_update_slice(cache[name], val,
-                                                     (0, index, 0, 0))
+            out[name] = self._write_rows(cache[name], val, index)
         return out
 
     def _cache_read(self, cache):
@@ -219,7 +227,13 @@ class QuantizedDenseLM:
         q = q.reshape(b, s, h_, dh)
         k = k.reshape(b, s, kv, dh)
         v = v.reshape(b, s, kv, dh)
-        pos = jnp.broadcast_to(jnp.arange(s)[None] + index, (b, s))
+        # index may be a scalar (lockstep batch / prefill chunk) or [B]
+        # (per-slot fill positions from the continuous-batching engine)
+        per_slot = jnp.ndim(index) == 1
+        if per_slot and s != 1:
+            raise ValueError("per-slot cache_index requires q_len == 1")
+        base = index[:, None] if per_slot else jnp.reshape(index, (1, 1))
+        pos = jnp.broadcast_to(jnp.arange(s)[None, :] + base, (b, s))
         q = L.apply_rope(q, pos, spec.rope_theta)
         if self.kv_bits is None:
             # bf16 cache: rotate only the new rows, store post-RoPE
@@ -232,13 +246,14 @@ class QuantizedDenseLM:
             all_pos = jnp.broadcast_to(jnp.arange(s_k)[None], (b, s_k))
             k_all = L.apply_rope(k_all.astype(jnp.float32), all_pos,
                                  spec.rope_theta)
-        # causal per-query validity: query at index+i sees keys ≤ index+i
-        valid = jnp.arange(s_k)[None, :] <= (index + jnp.arange(s))[:, None]
+        # causal per-query validity: the query at position p sees keys ≤ p
+        # (per-row positions when `index` is per-slot)
+        valid = jnp.arange(s_k)[None, None, :] <= pos[:, :, None]  # [b,s,s_k]
         g = h_ // kv
         qg = q.reshape(b, s, kv, g, dh)
         logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                             k_all.astype(jnp.float32)) / math.sqrt(dh)
-        logits = jnp.where(valid[None, None, None, :, :], logits, -1e30)
+        logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1)
         attn = jnp.einsum("bkgqs,bskd->bqkgd", probs,
                           v_all.astype(jnp.float32))
@@ -287,11 +302,21 @@ class QuantizedDenseLM:
             fn = self._jit_cache[key] = jax.jit(wrapped)
         return fn
 
+    def forward_chunk(self, params: Params, tokens: jnp.ndarray,
+                      cache: Params, index: jnp.ndarray):
+        """Token chunk [B, S] at fill position `index` → per-position
+        logits [B, S, V] + updated cache. S == 1 with a [B] vector index
+        is a per-slot continuous-batching decode step; S > 1 with a
+        scalar index is one chunk of a chunked prefill (causal within
+        the chunk, attending to everything already cached)."""
+        return self._jitted("forward", self._forward)(
+            params, tokens, cache, jnp.asarray(index, jnp.int32))
+
     def decode_step(self, params: Params, tokens: jnp.ndarray,
                     cache: Params, index: jnp.ndarray):
-        """One decode step for [B, 1] tokens at fill position `index`."""
-        logits, new_cache = self._jitted("forward", self._forward)(
-            params, tokens, cache, jnp.asarray(index, jnp.int32))
+        """One decode step for [B, 1] tokens at fill position `index`
+        (scalar, or [B] per-slot fill positions)."""
+        logits, new_cache = self.forward_chunk(params, tokens, cache, index)
         return logits[:, 0], new_cache
 
     def prefill(self, params: Params, tokens: jnp.ndarray, cache: Params):

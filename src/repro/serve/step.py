@@ -4,12 +4,21 @@ continuous-batching scheduler for the example server.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 Params = Any
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_slot(cache: Params, slot: jnp.ndarray) -> Params:
+    """Zero one slot's KV range across every cache leaf (one fused
+    dispatch; `slot` is traced so all slots share a single compile; the
+    cache is donated so readmission never copies the full KV region)."""
+    return jax.tree.map(lambda a: a.at[:, slot].set(0), cache)
 
 
 def make_prefill_step(model) -> Callable:
@@ -59,19 +68,22 @@ class BatchScheduler:
     """
 
     def __init__(self, model, params, *, slots: int, max_len: int,
-                 temperature: float = 0.0, cache_dtype=jnp.float32):
+                 temperature: float = 0.0, cache_dtype=jnp.float32,
+                 seed: int = 0):
         if model.cfg.family in ("ssm", "hybrid"):
             raise ValueError("per-slot scheduler requires attention caches")
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.temperature = temperature
         self.queue: list[Request] = []
         self.active: dict[int, Request] = {}
         self.prompt_ptr: dict[int, int] = {}
         self.pos = [0] * slots
         self.next_feed = [0] * slots
         self.cache = model.init_cache(slots, max_len, dtype=cache_dtype)
+        self._rng = jax.random.PRNGKey(seed)
         self._decode = jax.jit(make_decode_step(model,
                                                 temperature=temperature))
 
@@ -83,6 +95,12 @@ class BatchScheduler:
             if slot in self.active or not self.queue:
                 continue
             req = self.queue.pop(0)
+            if self.pos[slot] > 0:
+                # explicit slot-reuse invalidation: zero the freed slot's
+                # KV range rather than relying on the per-slot causal mask
+                # to hide every stale row of the previous occupant
+                self.cache = _zero_slot(self.cache,
+                                        jnp.asarray(slot, jnp.int32))
             self.active[slot] = req
             self.prompt_ptr[slot] = 0
             self.pos[slot] = 0
@@ -96,7 +114,13 @@ class BatchScheduler:
         tokens = jnp.asarray([[self.next_feed[s]] for s in range(self.slots)],
                              jnp.int32)
         idx = jnp.asarray([self.pos[s] for s in range(self.slots)], jnp.int32)
-        nxt, _, self.cache = self._decode(self.params, tokens, self.cache, idx)
+        rng = None
+        if self.temperature > 0:
+            # per-step PRNG key: without it `make_decode_step` silently
+            # degrades temperature sampling to argmax
+            self._rng, rng = jax.random.split(self._rng)
+        nxt, _, self.cache = self._decode(self.params, tokens, self.cache,
+                                          idx, rng)
 
         finished = []
         for slot, req in list(self.active.items()):
