@@ -15,6 +15,14 @@ On this CPU host the interpret-mode kernel overhead dominates the integer
 rows (same caveat as `kernel_bench.py`); the scheduler-level win — chunked
 prefill + batched decode vs the token drip — is visible on any backend.
 
+Also benchmarks the attention *data path* in isolation: one decode step's
+attention over the same page pool through (a) the legacy gather-to-slab
+round trip (gather every page into a contiguous slab, dense attention on
+it) vs (b) the block-table-native `kernels.ops.paged_attention` walk.
+Each row reports tokens/s and the bytes of KV materialised into a slab
+per step — the copy traffic the paged kernel deletes (0 for the paged
+row: pages are read in place).
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
 """
 from __future__ import annotations
@@ -97,6 +105,77 @@ def bench_engine(adapter, prompts, max_new, slots, max_len, page_size,
                   + sum(len(r.generated) for r in eng.active))
 
 
+def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
+    """Slab-gather vs paged-kernel decode attention over one page pool."""
+    import math
+
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.serve.engine import pages as PG
+    from repro.serve.engine.pages import pages_for
+
+    nl, kh, dh, h = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
+                     cfg.n_heads)
+    per_seq = pages_for(seq_len, page_size)
+    n_pages = 1 + slots * per_seq
+    rng = np.random.default_rng(0)
+    pool = {
+        "k": jnp.asarray(rng.standard_normal(
+            (nl, n_pages, page_size, kh, dh)), jnp.float32),
+        "v": jnp.asarray(rng.standard_normal(
+            (nl, n_pages, page_size, kh, dh)), jnp.float32),
+    }
+    bt = jnp.asarray(
+        np.arange(1, n_pages).reshape(slots, per_seq), jnp.int32)
+    qpos = jnp.full((slots, 1), seq_len - 1, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((nl, slots, 1, h, dh)), jnp.float32)
+
+    def slab_attn(ql, k_all, v_all):
+        g = h // kh
+        qg = ql.reshape(slots, 1, kh, g, dh)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_all) / math.sqrt(dh)
+        valid = jnp.arange(k_all.shape[1])[None, None, :] <= qpos[:, :, None]
+        logits = jnp.where(valid[:, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_all)
+        return out.reshape(slots, 1, h, dh)
+
+    @jax.jit
+    def slab_step(pool, q):
+        slab = PG.gather_pages(pool, bt)
+        return jnp.stack([slab_attn(q[l], slab["k"][l], slab["v"][l])
+                          for l in range(nl)])
+
+    @jax.jit
+    def paged_step(pool, q):
+        return jnp.stack([
+            kops.paged_attention(
+                q[l], {"k": pool["k"][l], "v": pool["v"][l]}, bt, qpos)
+            for l in range(nl)])
+
+    slab_bytes = 2 * nl * slots * per_seq * page_size * kh * dh * 4
+
+    rows = []
+    for name, fn, gathered in (("attn_slab_gather", slab_step, slab_bytes),
+                               ("attn_paged_kernel", paged_step, 0)):
+        fn(pool, q).block_until_ready()            # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(pool, q)
+        out.block_until_ready()
+        wall = time.perf_counter() - t0
+        rows.append({
+            "path": name,
+            "tokens_per_s": round(slots * iters / wall, 2),
+            "gathered_bytes_per_step": gathered,
+            "seq_len": seq_len,
+            "page_size": page_size,
+            "wall_s": round(wall, 4),
+        })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -162,6 +241,14 @@ def main(argv=None):
             "steps": steps,
             "wall_s": round(wall, 3),
         }
+        rows.append(row)
+        print(",".join(str(row[k]) for k in row))
+
+    # attention data path in isolation: the slab round trip vs the
+    # block-table-native kernel walk over the identical page pool
+    seq_len, iters = (64, 3) if args.smoke else (512, 20)
+    for row in bench_attn_data_path(cfg, page_size=16, slots=4,
+                                    seq_len=seq_len, iters=iters):
         rows.append(row)
         print(",".join(str(row[k]) for k in row))
 

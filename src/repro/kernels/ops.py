@@ -27,6 +27,7 @@ from .block_hadamard import _column_tile, rotation_operand
 from .block_hadamard import block_hadamard as _bh_kernel
 from .hadamard_quant import hadamard_quant as _hq_kernel
 from .int4_matmul import int4_matmul as _i4_kernel
+from .paged_attention import paged_attention as _pa_kernel
 
 __all__ = [
     "use_kernels",
@@ -37,6 +38,7 @@ __all__ = [
     "int4_matmul",
     "pack_int4_weights",
     "infer_int4_scales",
+    "paged_attention",
 ]
 
 _STATE = {"enabled": True}
@@ -122,6 +124,29 @@ def int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
         out = _i4_kernel(qa, sa, za, w_packed, w_scale,
                          interpret=not _on_tpu(), **kw)
     return out.reshape(*lead, out.shape[-1])
+
+
+def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
+                    q_positions: jnp.ndarray, *,
+                    rope_theta: float | None = None,
+                    kv_bits: int | None = None,
+                    kv_group: int | None = None) -> jnp.ndarray:
+    """Block-table-native causal attention over one layer's KV page pool.
+
+    q [B, S, H, Dh] (already rotated), kv pages [n_pages, T, KH, Dh]
+    (float post-RoPE K, or int8/int4 codes + scale/zero pages with
+    `kv_bits`/`kv_group` set — dequant and the pre-RoPE K rotation happen
+    inside the walk), block_tables [B, P] int32, q_positions [B, S].
+    Pallas on TPU, interpret elsewhere, the bit-identical jnp page walk
+    under `use_kernels(False)`. Returns [B, S, H, Dh] f32.
+    """
+    if not kernels_enabled():
+        return _ref.paged_attention_ref(
+            q, kv, block_tables, q_positions, rope_theta=rope_theta,
+            kv_bits=kv_bits, kv_group=kv_group)
+    return _pa_kernel(q, kv, block_tables, q_positions,
+                      rope_theta=rope_theta, kv_bits=kv_bits,
+                      kv_group=kv_group, interpret=not _on_tpu())
 
 
 def infer_int4_scales(w: jnp.ndarray) -> jnp.ndarray:

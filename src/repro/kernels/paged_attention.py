@@ -1,0 +1,288 @@
+"""Pallas TPU kernel: block-table-native paged causal attention.
+
+The serving engine used to gather every active sequence's KV pages into a
+contiguous `[n_layers, B, P·page_size, ...]` slab, run dense attention on
+it, and scatter the new rows back — one full HBM round trip of the whole
+active context per decode step. This kernel deletes the slab: the grid is
+`(batch, page_columns)` and each instance walks one sequence's block table
+directly, DMA-ing one `[page_size, KH, Dh]` page at a time into VMEM via
+scalar-prefetched page ids (`PrefetchScalarGridSpec` — the block-spec
+index map reads `block_tables[b, p]` to pick which pool page to fetch).
+Softmax runs online across the page walk (flash-style m/l/acc VMEM
+accumulators, the page axis innermost so they stay resident), and the
+output block is written once on the last page column.
+
+Three KV page formats are served by the same walk:
+
+  * float pages (bf16/f32) holding post-RoPE K — the bf16 and fake-quant
+    engine backends;
+  * int8/int4 code pages with per-(position, head-group) asymmetric
+    scale/zero pages riding along — dequantized in VMEM, and (because the
+    integer cache stores K pre-RoPE) rotated in-kernel with the absolute
+    position of each page row.
+
+Every arithmetic step lives in a small jnp helper shared with
+`kernels.ref.paged_attention_ref`, which replays the identical page walk
+on a gathered view — that is what makes the dispatch-vs-reference
+comparison bit-for-bit in interpret mode, the same contract
+`hadamard_quant`/`int4_matmul` already meet.
+
+Padding is handled entirely by the causal mask: pad block-table entries
+point at the scratch page, whose rows sit at slab positions greater than
+every query position, so `kpos <= qpos` hides them exactly as it hides a
+sequence's own not-yet-written rows.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_attention", "paged_attention_reference"]
+
+MASK_VALUE = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Shared arithmetic (kernel body AND the bit-for-bit jnp reference)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Mirror of `models.layers.rope_frequencies` (kernels sit below the
+    model layer, so the three lines are duplicated rather than imported).
+
+    Computed host-side in numpy so the kernel operand and the reference's
+    traced constant embed the *identical* literal — `pow` rounds a ulp
+    differently between XLA's eager dispatch and constant folding, which
+    would break the kernel-vs-reference bit-for-bit contract."""
+    freqs = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                             / np.float32(head_dim)))
+    return jnp.asarray(freqs, jnp.float32)
+
+
+def dequant_page(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+                 *, bits: int, group: int) -> jnp.ndarray:
+    """Asymmetric per-(row, head, group) dequant of one KV page.
+
+    codes [T, KH, Dh] int8 (stored offset by 2^(bits-1)), scale/zero
+    [T, KH, Dh/group] — the exact arithmetic of
+    `QuantizedDenseLM._cache_read`.
+    """
+    off = 2 ** (bits - 1)
+    shp = codes.shape
+    cg = (codes.astype(jnp.float32) + off).reshape(
+        *shp[:-1], shp[-1] // group, group)
+    return (scale[..., None] * (cg + zero[..., None])).reshape(shp)
+
+
+def rope_page(k: jnp.ndarray, kpos: jnp.ndarray,
+              freqs: jnp.ndarray) -> jnp.ndarray:
+    """Apply RoPE at absolute positions `kpos` [T] to one K page
+    [T, KH, Dh] (f32) — `models.layers.apply_rope` arithmetic with the
+    head axis broadcast."""
+    ang = kpos[:, None].astype(jnp.float32) * freqs         # [T, Dh/2]
+    cos, sin = jnp.cos(ang)[:, None, :], jnp.sin(ang)[:, None, :]
+    x1, x2 = jnp.split(k.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def page_update(m, l, acc, q, k, v, qpos, kpos, scale):
+    """One online-softmax step over a single KV page.
+
+    q [S, KH, G, Dh] f32, k/v [T, KH, Dh] f32, qpos [S], kpos [T];
+    m/l [KH, G, S], acc [KH, G, S, Dh]. Fully-masked pages contribute
+    exactly zero (exp underflows), so scratch-padded table columns are
+    free no-ops.
+    """
+    logits = jnp.einsum("skgd,tkd->kgst", q, k) * scale
+    valid = kpos[None, :] <= qpos[:, None]                   # [S, T]
+    logits = jnp.where(valid[None, None], logits, MASK_VALUE)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum("kgst,tkd->kgsd", p, v)
+    return m_new, l_new, acc_new
+
+
+def finalize(l, acc):
+    """acc/l → [S, H, Dh] f32 (a single page walk degenerates to the plain
+    softmax: one m/l pass ≡ exp(x−max)/Σ)."""
+    kh, g, s, dh = acc.shape
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.einsum("kgsd->skgd", out).reshape(s, kh * g, dh)
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(bt_ref, *refs, s, kh, g, dh, t, scale, bits, group, theta):
+    quant = bits is not None
+    if quant:
+        (q_ref, qpos_ref, k_ref, v_ref, ks_ref, kz_ref, vs_ref, vz_ref,
+         fr_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, qpos_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32).reshape(s, kh, g, dh)
+    qpos = qpos_ref[0]
+    kpos = p * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
+    if quant:
+        k = dequant_page(k_ref[0], ks_ref[0], kz_ref[0],
+                         bits=bits, group=group)
+        v = dequant_page(v_ref[0], vs_ref[0], vz_ref[0],
+                         bits=bits, group=group)
+        if theta is not None:
+            k = rope_page(k, kpos, fr_ref[...][0])
+    else:
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+
+    m, l, acc = page_update(m_ref[...], l_ref[...], acc_ref[...],
+                            q, k, v, qpos, kpos, scale)
+    m_ref[...] = m
+    l_ref[...] = l
+    acc_ref[...] = acc
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _epilogue():
+        o_ref[0] = finalize(l_ref[...], acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rope_theta", "kv_bits",
+                                             "kv_group", "interpret"))
+def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
+                    q_positions: jnp.ndarray, *,
+                    rope_theta: float | None = None,
+                    kv_bits: int | None = None,
+                    kv_group: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Causal attention of `q` against one layer's KV page pool.
+
+    q [B, S, H, Dh] (queries already rotated); kv {"k", "v"} pages
+    [n_pages, T, KH, Dh] (+ "{k,v}_{scale,zero}" [n_pages, T, KH, Dh/g]
+    when `kv_bits` is set); block_tables [B, P] int32 (pad = scratch);
+    q_positions [B, S] int32 absolute positions. `rope_theta` rotates the
+    dequantized K pages in-kernel (integer caches store K pre-RoPE).
+    Returns [B, S, H, Dh] float32.
+    """
+    b, s, h, dh = q.shape
+    t, kh = kv["k"].shape[1], kv["k"].shape[2]
+    g = h // kh
+    n_cols = block_tables.shape[1]
+    quant = kv_bits is not None
+    group = kv_group if quant else None
+    if quant and dh % group:
+        raise ValueError(f"head_dim {dh} not divisible by kv_group {group}")
+
+    kern = functools.partial(
+        _kernel, s=s, kh=kh, g=g, dh=dh, t=t, scale=1.0 / math.sqrt(dh),
+        bits=kv_bits, group=group, theta=rope_theta if quant else None)
+
+    def page_spec(last):
+        return pl.BlockSpec((1, t, kh, last),
+                            lambda bb, pp, bt: (bt[bb, pp], 0, 0, 0))
+
+    in_specs = [
+        pl.BlockSpec((1, s, h, dh), lambda bb, pp, bt: (bb, 0, 0, 0)),
+        pl.BlockSpec((1, s), lambda bb, pp, bt: (bb, 0)),
+        page_spec(dh),
+        page_spec(dh),
+    ]
+    operands = [q, q_positions.astype(jnp.int32), kv["k"], kv["v"]]
+    if quant:
+        ng = dh // group
+        in_specs += [page_spec(ng)] * 4
+        operands += [kv["k_scale"], kv["k_zero"],
+                     kv["v_scale"], kv["v_zero"]]
+        in_specs.append(pl.BlockSpec((1, dh // 2),
+                                     lambda bb, pp, bt: (0, 0)))
+        operands.append(rope_frequencies(dh, rope_theta or 1.0)[None]
+                        if rope_theta is not None
+                        else jnp.zeros((1, dh // 2), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_cols),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, s, h, dh),
+                               lambda bb, pp, bt: (bb, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kh, g, s), jnp.float32),
+            pltpu.VMEM((kh, g, s), jnp.float32),
+            pltpu.VMEM((kh, g, s, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), *operands)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference (re-exported as `kernels.ref.paged_attention_ref`)
+# ---------------------------------------------------------------------------
+
+def paged_attention_reference(q: jnp.ndarray, kv: dict,
+                              block_tables: jnp.ndarray,
+                              q_positions: jnp.ndarray, *,
+                              rope_theta: float | None = None,
+                              kv_bits: int | None = None,
+                              kv_group: int | None = None) -> jnp.ndarray:
+    """Plain-XLA mirror of the kernel: the identical page walk (same
+    helpers, same op order) as a `lax.scan` over table columns, vmapped
+    over sequences — bit-for-bit against the interpret-mode kernel."""
+    b, s, h, dh = q.shape
+    t, kh = kv["k"].shape[1], kv["k"].shape[2]
+    g = h // kh
+    quant = kv_bits is not None
+    scale = 1.0 / math.sqrt(dh)
+    freqs = (rope_frequencies(dh, rope_theta)
+             if quant and rope_theta is not None else None)
+
+    def one_sequence(qb, qposb, btb):
+        qb = qb.astype(jnp.float32).reshape(s, kh, g, dh)
+
+        def step(carry, inp):
+            p, page = inp
+            kpos = p * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
+            if quant:
+                k = dequant_page(kv["k"][page], kv["k_scale"][page],
+                                 kv["k_zero"][page],
+                                 bits=kv_bits, group=kv_group)
+                v = dequant_page(kv["v"][page], kv["v_scale"][page],
+                                 kv["v_zero"][page],
+                                 bits=kv_bits, group=kv_group)
+                if freqs is not None:
+                    k = rope_page(k, kpos, freqs)
+            else:
+                k = kv["k"][page].astype(jnp.float32)
+                v = kv["v"][page].astype(jnp.float32)
+            return page_update(*carry, qb, k, v, qposb, kpos, scale), None
+
+        m0 = jnp.full((kh, g, s), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((kh, g, s), jnp.float32)
+        a0 = jnp.zeros((kh, g, s, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (jnp.arange(block_tables.shape[1], dtype=jnp.int32), btb))
+        return finalize(l, acc)
+
+    return jax.vmap(one_sequence)(q, q_positions.astype(jnp.int32),
+                                  block_tables)

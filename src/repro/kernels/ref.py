@@ -13,6 +13,8 @@ import numpy as np
 
 from repro.core.hadamard import block_hadamard_transform
 
+from .paged_attention import paged_attention_reference as paged_attention_ref
+
 __all__ = [
     "block_hadamard_ref",
     "hadamard_quant_ref",
@@ -20,7 +22,12 @@ __all__ = [
     "int4_unpack",
     "int4_matmul_ref",
     "quantize_act_int_ref",
+    "paged_attention_ref",
 ]
+
+# `paged_attention_ref` mirrors the Pallas page walk bit-for-bit (shared
+# per-page helpers, same op order); the *independent* oracle for it is
+# gather-to-slab + plain-softmax attention, asserted in the tests.
 
 
 def block_hadamard_ref(x: jnp.ndarray, b: int) -> jnp.ndarray:

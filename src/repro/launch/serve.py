@@ -38,6 +38,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k most likely tokens "
+                    "(0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--integer-path", action="store_true")
@@ -76,6 +81,9 @@ def main(argv=None):
         if args.integer_path:
             raise SystemExit("--legacy-scheduler cannot drive the integer "
                              "path; the paged engine serves it")
+        if args.top_k > 0 or args.top_p < 1.0:
+            raise SystemExit("--legacy-scheduler has no top-k/top-p "
+                             "support; drop the flags or use the engine")
         sched = BatchScheduler(smodel, sparams, slots=args.slots,
                                max_len=args.max_len,
                                temperature=args.temperature)
@@ -113,7 +121,8 @@ def main(argv=None):
         engine.submit(EngineRequest(
             rid=rid, prompt=prompt,
             sampling=SamplingParams(temperature=args.temperature,
-                                    max_new=args.max_new)))
+                                    max_new=args.max_new,
+                                    top_k=args.top_k, top_p=args.top_p)))
     done = engine.run()
     print(f"{label}: served {len(done)} requests over {args.slots} slots "
           f"in {engine.n_steps} engine steps "

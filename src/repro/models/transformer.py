@@ -133,7 +133,7 @@ class Model:
     # ------------------------------------------------------------------
 
     def _apply_block(self, x, blk: Params, cache, cache_index, *,
-                     positions=None):
+                     positions=None, block_table=None):
         cfg = self.cfg
         hooks = self.quant_hooks
         new_cache = None
@@ -150,6 +150,7 @@ class Model:
         h, attn_cache = L.attention(h, blk["attn"], self.attn_spec,
                                     positions=positions, cache=cache,
                                     cache_index=cache_index,
+                                    block_table=block_table,
                                     act_in=hooks.get("act_in"))
         x = x + h
         h = L.apply_norm(x, blk["ffn_norm"], cfg.norm)
@@ -228,12 +229,13 @@ class Model:
         return shard_act(x, ("batch", "seq", "embed"))
 
     def _run_layers(self, params, x, *, caches=None, cache_index=None,
-                    remat: bool = False):
+                    block_table=None, remat: bool = False):
         cfg = self.cfg
 
         def body(carry, inp):
             blk, cache = inp
-            y, new_cache = self._apply_block(carry, blk, cache, cache_index)
+            y, new_cache = self._apply_block(carry, blk, cache, cache_index,
+                                             block_table=block_table)
             return y, new_cache
 
         if remat:
@@ -372,19 +374,25 @@ class Model:
         return logits[:, 0], new_caches
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
-                      caches: Params, index: jnp.ndarray):
+                      caches: Params, index: jnp.ndarray,
+                      block_table: jnp.ndarray | None = None):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated caches.
 
         The serving-engine entry point: S == 1 with a vector index is a
         per-slot continuous-batching decode step; S > 1 with a scalar
         index is one chunk of an incremental (chunked) prefill, causal
-        within the chunk and attending to everything already cached.
+        within the chunk and attending to everything already cached. With
+        `block_table` [B, P], `caches` is the engine's page pool (leaves
+        [n_layers, n_pages, page_size, ...]) and attention runs
+        block-table-native — new rows are written straight into their
+        pages and the paged-attention kernel walks the table.
         """
         x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
         x = shard_act(x, ("batch", "seq", "embed"))
         x, new_caches = self._run_layers(params, x, caches=caches,
-                                         cache_index=index)
+                                         cache_index=index,
+                                         block_table=block_table)
         x = L.apply_norm(x, params["final_norm"], self.cfg.norm)
         logits = x @ params["lm_head"].astype(self.cdt)
         return logits, new_caches

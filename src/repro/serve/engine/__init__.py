@@ -2,8 +2,12 @@
 
 Unifies the three execution paths — bf16, fake-quant (PTQ hooks), and
 packed-int4 integer serving — behind one `ServableModel` adapter, a paged
-KV cache (`pages`), and a chunked-prefill continuous-batching scheduler
-(`scheduler`). See each module's docstring for the design.
+KV cache (`pages`: allocator + block tables), and a chunked-prefill
+continuous-batching scheduler (`scheduler`). The data path is
+block-table-native: the pool and block tables flow into each backend's
+`forward_chunk`, which writes new KV rows into their pages and attends by
+walking the table in `kernels.ops.paged_attention` — no gathered slab.
+See each module's docstring for the design.
 """
 from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
                       as_servable)

@@ -10,11 +10,17 @@ The engine serves three execution paths through one interface:
     arithmetic, optional int8/int4 KV cache).
 
 All three expose `init_cache` (which doubles as the page-pool constructor:
-batch axis = page axis) and `forward_chunk(params, tokens, cache, index)` —
-per-position logits for a [B, S] token chunk written at fill position
-`index` (scalar, or [B] per-slot vector when S == 1). The adapter wraps
-that pair, normalises cache dtype handling, and jits the step end to end,
-so `scheduler.ServeEngine` never branches on which backend runs underneath.
+batch axis = page axis) and `forward_chunk(params, tokens, cache, index,
+block_table)` — per-position logits for a [B, S] token chunk written at
+fill position `index` (scalar, or [B] per-slot vector when S == 1). The
+engine always passes its page pool as `cache` together with per-sequence
+`block_table` rows, and the forward is block-table-native: new KV rows are
+scattered straight into their pages and attention walks the table through
+`kernels.ops.paged_attention` — no gathered slab exists anywhere in the
+step. With `block_table=None` the same entry serves the dense contiguous
+cache (the test oracle and the legacy scheduler). The adapter wraps that
+pair, normalises cache dtype handling, and jits the step end to end, so
+`scheduler.ServeEngine` never branches on which backend runs underneath.
 """
 from __future__ import annotations
 
@@ -42,11 +48,14 @@ class ServableModel(Protocol):
         ...
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
-                      cache: Params, index: jnp.ndarray):
+                      cache: Params, index: jnp.ndarray,
+                      block_table: jnp.ndarray | None = None):
         """[B, S] tokens at fill position(s) `index` → ([B, S, V] logits,
-        updated cache). `params` is passed explicitly (usually
-        `adapter.params`) so the engine's fused jits trace the weights as
-        arguments, not as per-executable constants."""
+        updated cache). With `block_table` [B, P] the cache is the page
+        pool and the forward is block-table-native. `params` is passed
+        explicitly (usually `adapter.params`) so the engine's fused jits
+        trace the weights as arguments, not as per-executable
+        constants."""
         ...
 
 
@@ -78,9 +87,9 @@ class DenseModelAdapter(_AdapterBase):
     def init_cache(self, batch: int, max_len: int) -> Params:
         return self.model.init_cache(batch, max_len, dtype=self.cache_dtype)
 
-    def forward_chunk(self, params, tokens, cache, index):
+    def forward_chunk(self, params, tokens, cache, index, block_table=None):
         return self._forward(params, tokens, cache,
-                             jnp.asarray(index, jnp.int32))
+                             jnp.asarray(index, jnp.int32), block_table)
 
 
 class IntegerModelAdapter(_AdapterBase):
@@ -94,9 +103,10 @@ class IntegerModelAdapter(_AdapterBase):
     def init_cache(self, batch: int, max_len: int) -> Params:
         return self.qlm.init_cache(batch, max_len)
 
-    def forward_chunk(self, params, tokens, cache, index):
+    def forward_chunk(self, params, tokens, cache, index, block_table=None):
         # QuantizedDenseLM jits internally (per kernels-enabled state)
-        return self.qlm.forward_chunk(params, tokens, cache, index)
+        return self.qlm.forward_chunk(params, tokens, cache, index,
+                                      block_table)
 
 
 def as_servable(model, params: Params, **kw) -> ServableModel:

@@ -1,4 +1,4 @@
-"""Paged KV cache: fixed-size pages, per-sequence block tables, gather/scatter.
+"""Paged KV cache: fixed-size pages, per-sequence block tables, allocator.
 
 Instead of one dense `[slots, max_len]` KV region per slot, the engine owns a
 single device-side *page pool* per KV leaf — shape `[n_layers, n_pages,
@@ -13,14 +13,16 @@ the same machinery pages the bf16 cache ({k, v}) and the asymmetric
 per-(position, head) int8/int4 KV cache ({k, v, k_scale, v_scale, k_zero, v_zero}): integer
 pages carry their codes *and* their scale/zero rows.
 
-Per step the engine gathers each active sequence's pages into a contiguous
-slab `[n_layers, B, P·page_size, ...]` (positions in the slab coincide with
-absolute positions, so RoPE and causal masks need no translation), runs the
-backend forward on it, and scatters only the newly written rows back into
-the pool. On TPU the gather lowers to a dynamic-gather over the page axis;
-fusing it into a Pallas paged-attention kernel is a ROADMAP follow-on — the
-arithmetic on the gathered slab already runs on the `repro.kernels.ops`
-dispatch layer, so that fusion changes data movement only.
+The data path is block-table-native: the scheduler hands the pool and the
+per-sequence block-table rows straight to the backend's `forward_chunk`,
+which scatters each new KV row into its page and attends by walking the
+table inside `kernels.ops.paged_attention` (one Mosaic kernel on TPU: the
+page ids are scalar-prefetched and each page is DMA'd into VMEM exactly
+once, with online softmax across the walk). No contiguous
+`[n_layers, B, P·page_size, ...]` slab is ever materialised. This module
+therefore only keeps the *bookkeeping* — allocator + block tables — plus
+the legacy `gather_pages` / `scatter_*_rows` primitives, which survive
+purely as the test oracle the paged kernel is checked against.
 
 Page 0 is reserved as a scratch page: padded batch rows (inactive slots) and
 padded block-table entries point at it, so their masked reads and dead
@@ -44,13 +46,19 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over pool pages (page 0 reserved)."""
+    """Host-side free-list allocator over pool pages (page 0 reserved).
+
+    A membership *set* shadows the LIFO stack so the double-free guard is
+    O(1) per page instead of an O(n) list scan — freeing a long sequence's
+    pages used to be quadratic in pool size.
+    """
 
     def __init__(self, n_pages: int):
         if n_pages < 2:
             raise ValueError("pool needs at least 2 pages (page 0 is scratch)")
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, SCRATCH_PAGE, -1))
+        self._free_set = set(self._free)
 
     @property
     def n_free(self) -> int:
@@ -66,18 +74,26 @@ class PageAllocator:
             raise MemoryError(f"page pool exhausted: need {n}, "
                               f"free {len(self._free)}")
         out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
         return out
 
     def free(self, pages: list[int]):
+        # validate the whole batch (including intra-batch duplicates)
+        # before mutating, so a raise leaves the allocator consistent
+        batch = set()
         for p in pages:
-            if p == SCRATCH_PAGE or p in self._free or p >= self.n_pages:
+            if p <= SCRATCH_PAGE or p >= self.n_pages \
+                    or p in self._free_set or p in batch:
                 raise ValueError(f"double/invalid free of page {p}")
+            batch.add(p)
         self._free.extend(pages)
+        self._free_set.update(batch)
 
 
 @jax.jit
 def gather_pages(pool: Params, block_tables: jnp.ndarray) -> Params:
-    """Gather pages into contiguous per-sequence slabs.
+    """Gather pages into contiguous per-sequence slabs (TEST ORACLE ONLY —
+    the serving path is block-table-native and never materialises slabs).
 
     pool leaves: [n_layers, n_pages, page_size, ...]
     block_tables: [B, P] int32 page ids (pad entries = SCRATCH_PAGE)
@@ -95,7 +111,8 @@ def gather_pages(pool: Params, block_tables: jnp.ndarray) -> Params:
 @jax.jit
 def scatter_decode_rows(pool: Params, slab: Params, fill_pos: jnp.ndarray,
                         page_ids: jnp.ndarray, offsets: jnp.ndarray) -> Params:
-    """Write each slot's newly decoded KV row back into its page.
+    """Write each slot's newly decoded KV row back into its page (TEST
+    ORACLE ONLY — the forward writes rows in place on the serving path).
 
     Extracts row `fill_pos[i]` of slot i from every slab leaf and stores it
     at (page_ids[i], offsets[i]) in the pool. Padded slots point at the
@@ -116,7 +133,7 @@ def scatter_prefill_rows(pool: Params, slab: Params, positions: jnp.ndarray,
                          offsets: jnp.ndarray) -> Params:
     """Write a prefill chunk's KV rows (single sequence, slab batch row 0)
     back into its pages: slab positions `positions[j]` land at
-    (page_ids[j], offsets[j])."""
+    (page_ids[j], offsets[j]). TEST ORACLE ONLY — see gather_pages."""
 
     def upd(p, s):
         new = s[:, 0, positions]                   # [n_layers, S, ...]
@@ -155,7 +172,17 @@ class PagedKVCache:
                 position % self.page_size)
 
     def block_table_array(self, rids: list[int], n_cols: int) -> jnp.ndarray:
-        """[len(rids), n_cols] int32 table, short rows padded with scratch."""
-        bt = [(self.tables[r] if r is not None else [])[:n_cols] for r in rids]
+        """[len(rids), n_cols] int32 table, short rows padded with scratch.
+
+        A row longer than `n_cols` is an error, never a silent truncation:
+        a too-narrow table would drop live pages from the kernel's walk
+        (and from the write targeting) without any visible failure.
+        """
+        bt = [self.tables[r] if r is not None else [] for r in rids]
+        for r, row in zip(rids, bt):
+            if len(row) > n_cols:
+                raise ValueError(
+                    f"block table for sequence {r} holds {len(row)} pages "
+                    f"but only {n_cols} columns were requested")
         bt = [row + [SCRATCH_PAGE] * (n_cols - len(row)) for row in bt]
         return jnp.asarray(bt, jnp.int32)

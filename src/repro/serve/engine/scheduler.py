@@ -8,23 +8,31 @@ Scheduling model (one `step()` = one engine iteration):
      running sequence can never hit an out-of-pages fault mid-decode.
   2. **Decode** — every generating sequence advances one token in a single
      batched `forward_chunk` call with per-slot fill positions (vector
-     cache index). The batch is padded to `max_seqs` rows pointing at the
-     scratch page, so batch shape — and hence the jit cache — is fixed.
+     cache index) and its block-table rows. The batch is padded to
+     `max_seqs` rows pointing at the scratch page, so batch shape — and
+     hence the jit cache — is fixed.
   3. **Chunked prefill** — whatever remains of the per-step token budget
      goes to prompt processing, `prefill_chunk` tokens at a time through
      the same `forward_chunk` entry (causal within the chunk, scalar fill
      index), instead of the legacy one-token-per-step prompt drip. Chunks
-     are padded to the next power of two so prefill shapes stay bounded;
-     padded tail rows are computed but scatter to the scratch page, so
-     they never reach a live page.
+     are padded to the next power of two so prefill shapes stay bounded.
+
+Both phases are block-table-native: the page pool and block tables go
+straight into `forward_chunk`, which writes each new KV row into its page
+and walks the table inside the paged-attention kernel — the scheduler
+never materialises a gathered slab (`pages.gather_pages` /
+`pages.scatter_*_rows` survive only as the test oracle).
 
 Sampling threads one PRNG key per engine step (split per request batch), so
 `temperature > 0` is genuinely stochastic — per-request `SamplingParams`
-pick greedy vs temperature sampling row by row.
+pick greedy vs temperature sampling row by row, with optional top-k /
+nucleus (top-p) filtering fused into the same `_sample_tokens` dispatch and
+per-request stop sequences cutting generation short.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +40,6 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-from . import pages as PG
 from .adapter import ServableModel
 from .pages import PagedKVCache, pages_for
 
@@ -44,21 +51,48 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-@jax.jit
-def _sample_tokens(key, logits, temps):
-    """One fused device call: greedy rows where temp == 0, categorical
-    (logits/temp) elsewhere."""
+@functools.partial(jax.jit, static_argnames=("filtered",))
+def _sample_tokens(key, logits, temps, top_ks, top_ps, *, filtered=True):
+    """One fused device call: greedy rows where temp == 0; elsewhere
+    categorical over logits/temp restricted to the top-k tokens (k == 0
+    disables) and then the nucleus — the smallest set whose probability
+    mass reaches top_p (top_p >= 1 disables). `filtered=False` (static —
+    the scheduler knows host-side when every row has filtering off) skips
+    the two full-vocab sorts so pure-greedy/temperature batches keep
+    their pre-top-k/p cost."""
+    v = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1)
     scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
+    if filtered:
+        desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+        kth = jnp.take_along_axis(desc,
+                                  jnp.clip(top_ks - 1, 0, v - 1)[:, None],
+                                  axis=-1)
+        keep = (top_ks <= 0)[:, None] | (scaled >= kth)
+        scaled = jnp.where(keep, scaled, -jnp.inf)
+        probs = jax.nn.softmax(scaled, axis=-1)
+        sp = jnp.sort(probs, axis=-1)[:, ::-1]
+        cum = jnp.cumsum(sp, axis=-1)
+        # a sorted token enters the nucleus while the mass before it is < p
+        keep_sorted = ((cum - sp) < top_ps[:, None]) \
+            | (top_ps >= 1.0)[:, None]
+        thresh = jnp.min(jnp.where(keep_sorted, sp, jnp.inf), axis=-1)
+        scaled = jnp.where(probs >= thresh[:, None], scaled, -jnp.inf)
     sampled = jax.random.categorical(key, scaled, axis=-1)
     return jnp.where(temps > 0, sampled, greedy)
 
 
 @dataclasses.dataclass
 class SamplingParams:
-    """Per-request sampling: temperature 0 → greedy argmax."""
+    """Per-request sampling: temperature 0 → greedy argmax. `top_k` > 0
+    restricts sampling to the k most likely tokens, `top_p` < 1 to the
+    nucleus; `stop` is a tuple of token-id sequences that end generation
+    early (the matched suffix is kept in `generated`)."""
     temperature: float = 0.0
     max_new: int = 8
+    top_k: int = 0
+    top_p: float = 1.0
+    stop: tuple = ()
 
 
 @dataclasses.dataclass
@@ -70,13 +104,14 @@ class EngineRequest:
     generated: list[int] = dataclasses.field(default_factory=list)
     # per generated token: float32 logits row (only when record_logits)
     step_logits: list[np.ndarray] = dataclasses.field(default_factory=list)
+    stop_hit: bool = False     # a stop sequence ended generation early
     # --- engine-internal state ---
     n_cached: int = 0          # KV rows already written for this sequence
     next_token: int | None = None
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.sampling.max_new
+        return self.stop_hit or len(self.generated) >= self.sampling.max_new
 
 
 class ServeEngine:
@@ -119,6 +154,12 @@ class ServeEngine:
             raise ValueError("empty prompt")
         if req.sampling.max_new < 1:
             raise ValueError("max_new must be >= 1")
+        if req.sampling.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < req.sampling.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if any(len(seq) == 0 for seq in req.sampling.stop):
+            raise ValueError("stop sequences must be non-empty")
         if req.n_cached or req.generated:
             raise ValueError(f"request {req.rid} carries stale engine "
                              "state; submit a fresh EngineRequest")
@@ -149,16 +190,18 @@ class ServeEngine:
         self.kv.release(req.rid)
         del self._committed[req.rid]
 
-    def _fused(self, name: str, impl):
-        """One fused device dispatch per phase: gather → forward →
-        scatter → sample (plus the PRNG split) trace into a single jit'd
-        call, so per-step host overhead stays flat as the model grows.
-        The pool is donated — a pool sized to fill HBM must not need a
-        second copy live across the in-place page update. Compiled once
-        per (phase, kernels-enabled) pair with the flag re-pinned inside
-        the traced body, so `use_kernels(...)` scopes keep selecting the
-        path they request instead of replaying the first-traced one."""
-        key = (name, kops.kernels_enabled())
+    def _fused(self, name: str, impl, variant=None):
+        """One fused device dispatch per phase: forward (page writes +
+        table walk inside) → sample (plus the PRNG split) trace into a
+        single jit'd call, so per-step host overhead stays flat as the
+        model grows. The pool is donated — a pool sized to fill HBM must
+        not need a second copy live across the in-place page update.
+        Compiled once per (phase, kernels-enabled, variant) triple with
+        the flag re-pinned inside the traced body, so `use_kernels(...)`
+        scopes keep selecting the path they request instead of replaying
+        the first-traced one; `variant` keys host-known static choices
+        (e.g. whether any row needs top-k/p filtering)."""
+        key = (name, kops.kernels_enabled(), variant)
         fn = self._jit_cache.get(key)
         if fn is None:
             enabled = key[1]
@@ -174,14 +217,29 @@ class ServeEngine:
     # decode
     # ------------------------------------------------------------------
 
-    def _decode_impl(self, pool, params, key, bt, tokens, fill, page_ids,
-                     offsets, temps):
-        slab = PG.gather_pages(pool, bt)
-        logits, slab = self.adapter.forward_chunk(params, tokens, slab, fill)
-        pool = PG.scatter_decode_rows(pool, slab, fill, page_ids, offsets)
+    @staticmethod
+    def _check_stop(req: EngineRequest):
+        for seq in req.sampling.stop:
+            n = len(seq)
+            if len(req.generated) >= n and req.generated[-n:] == list(seq):
+                req.stop_hit = True
+                return
+
+    @staticmethod
+    def _wants_filtering(batch) -> bool:
+        return any(r.sampling.top_k > 0 or r.sampling.top_p < 1.0
+                   for r in batch)
+
+    def _decode_impl(self, pool, params, key, bt, tokens, fill, temps,
+                     top_ks, top_ps, *, filtered):
+        # block-table-native: the forward writes each new KV row into its
+        # page and attends by walking `bt` — no gathered slab exists
+        logits, pool = self.adapter.forward_chunk(params, tokens, pool,
+                                                  fill, bt)
         key, sub = jax.random.split(key)
         lg = logits[:, 0].astype(jnp.float32)
-        return pool, key, lg, _sample_tokens(sub, lg, temps)
+        return pool, key, lg, _sample_tokens(sub, lg, temps, top_ks, top_ps,
+                                             filtered=filtered)
 
     def _decode_once(self) -> list[EngineRequest]:
         batch = self.decoding
@@ -197,17 +255,20 @@ class ServeEngine:
             jnp.int32)
         fill = jnp.asarray([r.n_cached for r in batch]
                            + [0] * (b - len(batch)), jnp.int32)
-        targets = [self.kv.page_of(r.rid, r.n_cached) for r in batch] \
-            + [(PG.SCRATCH_PAGE, 0)] * (b - len(batch))
-        page_ids = jnp.asarray([t[0] for t in targets], jnp.int32)
-        offsets = jnp.asarray([t[1] for t in targets], jnp.int32)
 
         temps = jnp.asarray([r.sampling.temperature for r in batch]
                             + [0.0] * (b - len(batch)), jnp.float32)
+        top_ks = jnp.asarray([r.sampling.top_k for r in batch]
+                             + [0] * (b - len(batch)), jnp.int32)
+        top_ps = jnp.asarray([r.sampling.top_p for r in batch]
+                             + [1.0] * (b - len(batch)), jnp.float32)
+        filtered = self._wants_filtering(batch)
         self.kv.pool, self._key, logits, toks = self._fused(
-            "decode", self._decode_impl)(
+            "decode",
+            functools.partial(self._decode_impl, filtered=filtered),
+            variant=filtered)(
             self.kv.pool, self.adapter.params, self._key, bt, tokens, fill,
-            page_ids, offsets, temps)
+            temps, top_ks, top_ps)
         toks = np.asarray(toks)
         finished = []
         for i, req in enumerate(list(batch)):
@@ -217,6 +278,7 @@ class ServeEngine:
             if self.record_logits:
                 req.step_logits.append(np.asarray(logits[i], np.float32))
             self.n_decode_tokens += 1
+            self._check_stop(req)
             if req.done:
                 self.decoding.remove(req)
                 self._finish(req)
@@ -227,21 +289,21 @@ class ServeEngine:
     # chunked prefill
     # ------------------------------------------------------------------
 
-    def _prefill_impl(self, pool, params, key, bt, tokens, start, positions,
-                      page_ids, offsets, last, temp):
-        slab = PG.gather_pages(pool, bt)
-        logits, slab = self.adapter.forward_chunk(params, tokens, slab, start)
+    def _prefill_impl(self, pool, params, key, bt, tokens, start, last,
+                      temp, top_k, top_p, *, filtered):
         # padded tail rows are computed too (their queries may attend the
         # garbage keys the same forward wrote for earlier padding tokens,
-        # so their outputs are meaningless and discarded); their scatter
-        # targets are the scratch page, so only real rows reach live pages
-        pool = PG.scatter_prefill_rows(pool, slab, positions, page_ids,
-                                       offsets)
+        # so their outputs are meaningless and discarded); their in-page
+        # writes land on the scratch page or on not-yet-valid slots that
+        # are rewritten before the causal mask ever exposes them
+        logits, pool = self.adapter.forward_chunk(params, tokens, pool,
+                                                  start, bt)
         key, sub = jax.random.split(key)
         lg = jax.lax.dynamic_index_in_dim(logits, last, axis=1,
                                           keepdims=False)[0]
         lg = lg.astype(jnp.float32)
-        return pool, key, lg, _sample_tokens(sub, lg[None], temp)[0]
+        return pool, key, lg, _sample_tokens(sub, lg[None], temp, top_k,
+                                             top_p, filtered=filtered)[0]
 
     def _prefill_once(self, budget: int) -> tuple[int, list[EngineRequest]]:
         """Advance the head-of-line prefill by up to `budget` prompt
@@ -258,18 +320,17 @@ class ServeEngine:
         # powers of two, so prefill compiles a bounded set of variants;
         # `last` (= real - 1) rides along as a traced scalar
         chunk = req.prompt[start:start + real] + [0] * (padded - real)
-        positions = jnp.arange(start, start + padded, dtype=jnp.int32)
-        targets = [self.kv.page_of(req.rid, p) for p in range(
-            start, start + real)] + [(PG.SCRATCH_PAGE, 0)] * (padded - real)
+        filtered = self._wants_filtering([req])
         self.kv.pool, self._key, last, tok = self._fused(
-            "prefill", self._prefill_impl)(
+            "prefill",
+            functools.partial(self._prefill_impl, filtered=filtered),
+            variant=filtered)(
             self.kv.pool, self.adapter.params, self._key, bt,
             jnp.asarray([chunk], jnp.int32), jnp.asarray(start, jnp.int32),
-            positions,
-            jnp.asarray([t[0] for t in targets], jnp.int32),
-            jnp.asarray([t[1] for t in targets], jnp.int32),
             jnp.asarray(real - 1, jnp.int32),
-            jnp.asarray([req.sampling.temperature], jnp.float32))
+            jnp.asarray([req.sampling.temperature], jnp.float32),
+            jnp.asarray([req.sampling.top_k], jnp.int32),
+            jnp.asarray([req.sampling.top_p], jnp.float32))
 
         req.n_cached = start + real
         self.n_prefill_tokens += real
@@ -282,6 +343,7 @@ class ServeEngine:
             req.next_token = int(tok)
             if self.record_logits:
                 req.step_logits.append(np.asarray(last, np.float32))
+            self._check_stop(req)
             if req.done:
                 self._finish(req)
                 finished.append(req)

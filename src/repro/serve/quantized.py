@@ -24,6 +24,13 @@ asymmetric per-(position, head) scale+zero pairs (KIVI-style), with K
 cached pre-RoPE (the rotation is re-applied after dequant at read time —
 RoPE mixes each outlier channel across a position-dependent pair of
 channels, which inflates the quantization range and wastes code points).
+
+Under the paged serving engine `forward_chunk` additionally takes the
+per-sequence block tables: new KV rows (codes + scale/zero for integer
+caches) are scattered straight into their pool pages and attention walks
+the table through `ops.paged_attention`, which dequantizes and re-rotates
+K inside the kernel — the same arithmetic as the dense read path, minus
+the slab.
 """
 from __future__ import annotations
 
@@ -155,43 +162,55 @@ class QuantizedDenseLM:
         return jax.lax.dynamic_update_slice(
             buf, val.astype(buf.dtype), (0, index, 0, 0))
 
+    def _quantize_kv(self, x):
+        """Asymmetric per-(position, head) KV quantization → (codes int8,
+        scale f32, zero f32). Codes are stored offset by 2^(bits-1) so the
+        unsigned range fits the int8 cache buffer at kv_bits=8."""
+        bits = self.kv_bits
+        levels = 2 ** bits - 1
+        off = 2 ** (bits - 1)
+        g = self.kv_group
+        shp = x.shape
+        xg = x.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // g, g)
+        mn = jnp.min(xg, -1, keepdims=True)
+        mx = jnp.max(xg, -1, keepdims=True)
+        # floor keeps zero-range groups from dividing by 0 while leaving
+        # the zero-point small enough for exact f32 arithmetic
+        s = jnp.maximum((mx - mn) / levels, 1e-6)
+        z = jnp.round(mn / s)
+        codes = jnp.clip(jnp.round(xg / s) - z, 0, levels)
+        return ((codes - off).reshape(shp).astype(jnp.int8),
+                s[..., 0].astype(jnp.float32),
+                z[..., 0].astype(jnp.float32))
+
+    def _kv_leaves(self, k, v):
+        """The (leaf name, value) pairs one KV write must store."""
+        if self.kv_bits is None:
+            return (("k", k), ("v", v))
+        kq, ks, kz = self._quantize_kv(k)
+        vq, vs, vz = self._quantize_kv(v)
+        return (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs),
+                ("k_zero", kz), ("v_zero", vz))
+
     def _cache_write(self, cache, k, v, index):
         """Write new K/V rows at positions [index, index+S) (bf16, or
         asymmetric integer codes per kv_bits with per-(position, head)
         scale+zero). For integer caches K arrives and is stored PRE-RoPE
         (the rotation is applied after dequantization in `_block`); the
         bf16 cache stores K already rotated."""
-        if self.kv_bits is None:
-            return {"k": self._write_rows(cache["k"], k, index),
-                    "v": self._write_rows(cache["v"], v, index)}
-        bits = self.kv_bits
-        levels = 2 ** bits - 1
-        # codes are stored offset by 2^(bits-1) so the unsigned range fits
-        # the int8 cache buffer at kv_bits=8
-        off = 2 ** (bits - 1)
-        g = self.kv_group
-
-        def q(x):
-            shp = x.shape
-            xg = x.astype(jnp.float32).reshape(*shp[:-1], shp[-1] // g, g)
-            mn = jnp.min(xg, -1, keepdims=True)
-            mx = jnp.max(xg, -1, keepdims=True)
-            # floor keeps zero-range groups from dividing by 0 while leaving
-            # the zero-point small enough for exact f32 arithmetic
-            s = jnp.maximum((mx - mn) / levels, 1e-6)
-            z = jnp.round(mn / s)
-            codes = jnp.clip(jnp.round(xg / s) - z, 0, levels)
-            return ((codes - off).reshape(shp).astype(jnp.int8),
-                    s[..., 0].astype(jnp.float32),
-                    z[..., 0].astype(jnp.float32))
-
-        kq, ks, kz = q(k)
-        vq, vs, vz = q(v)
         out = dict(cache)
-        for name, val in (("k", kq), ("v", vq),
-                          ("k_scale", ks), ("v_scale", vs),
-                          ("k_zero", kz), ("v_zero", vz)):
+        for name, val in self._kv_leaves(k, v):
             out[name] = self._write_rows(cache[name], val, index)
+        return out
+
+    def _paged_cache_write(self, cache, k, v, positions, block_table):
+        """Scatter new rows straight into their pages (pool leaves
+        [n_pages, page_size, ...]) — the block-table-native counterpart of
+        `_cache_write`, same quantization arithmetic."""
+        out = dict(cache)
+        for name, val in self._kv_leaves(k, v):
+            out[name] = L.paged_write_rows(cache[name], val, block_table,
+                                           positions)
         return out
 
     def _cache_read(self, cache):
@@ -210,7 +229,7 @@ class QuantizedDenseLM:
         return dq(cache["k"], cache["k_scale"], cache["k_zero"]), \
             dq(cache["v"], cache["v_scale"], cache["v_zero"])
 
-    def _block(self, x, blk, cache, index):
+    def _block(self, x, blk, cache, index, block_table=None):
         cfg = self.cfg
         spec = self.attn_spec
         b, s, d = x.shape
@@ -238,26 +257,39 @@ class QuantizedDenseLM:
         if self.kv_bits is None:
             # bf16 cache: rotate only the new rows, store post-RoPE
             k = L.apply_rope(k, pos, spec.rope_theta)
-        new_cache = self._cache_write(cache, k, v, index)
-        k_all, v_all = self._cache_read(new_cache)
-        s_k = k_all.shape[1]
-        if self.kv_bits is not None:
-            # integer cache holds pre-RoPE K: rotate after dequant
-            all_pos = jnp.broadcast_to(jnp.arange(s_k)[None], (b, s_k))
-            k_all = L.apply_rope(k_all.astype(jnp.float32), all_pos,
-                                 spec.rope_theta)
-        # causal per-query validity: the query at position p sees keys ≤ p
-        # (per-row positions when `index` is per-slot)
-        valid = jnp.arange(s_k)[None, None, :] <= pos[:, :, None]  # [b,s,s_k]
-        g = h_ // kv
-        qg = q.reshape(b, s, kv, g, dh)
-        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
-                            k_all.astype(jnp.float32)) / math.sqrt(dh)
-        logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
-        probs = jax.nn.softmax(logits, axis=-1)
-        attn = jnp.einsum("bkgqs,bskd->bqkgd", probs,
-                          v_all.astype(jnp.float32))
-        attn = attn.reshape(b, s, h_ * dh).astype(x.dtype)
+        if block_table is not None:
+            # block-table-native: scatter the new rows into their pages and
+            # walk the table in the kernel (in-kernel dequant + pre-RoPE K
+            # rotation for the integer page formats)
+            new_cache = self._paged_cache_write(cache, k, v, pos, block_table)
+            attn = kops.paged_attention(
+                q, new_cache, block_table, pos,
+                rope_theta=spec.rope_theta if self.kv_bits is not None
+                else None,
+                kv_bits=self.kv_bits,
+                kv_group=self.kv_group if self.kv_bits is not None else None)
+            attn = attn.reshape(b, s, h_ * dh).astype(x.dtype)
+        else:
+            new_cache = self._cache_write(cache, k, v, index)
+            k_all, v_all = self._cache_read(new_cache)
+            s_k = k_all.shape[1]
+            if self.kv_bits is not None:
+                # integer cache holds pre-RoPE K: rotate after dequant
+                all_pos = jnp.broadcast_to(jnp.arange(s_k)[None], (b, s_k))
+                k_all = L.apply_rope(k_all.astype(jnp.float32), all_pos,
+                                     spec.rope_theta)
+            # causal per-query validity: the query at position p sees keys
+            # ≤ p (per-row positions when `index` is per-slot)
+            valid = jnp.arange(s_k)[None, None, :] <= pos[:, :, None]
+            g = h_ // kv
+            qg = q.reshape(b, s, kv, g, dh)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                                k_all.astype(jnp.float32)) / math.sqrt(dh)
+            logits = jnp.where(valid[:, None, None, :, :], logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1)
+            attn = jnp.einsum("bkgqs,bskd->bqkgd", probs,
+                              v_all.astype(jnp.float32))
+            attn = attn.reshape(b, s, h_ * dh).astype(x.dtype)
         x = x + _int_linear(attn, blk["attn"]["wo"])
 
         hx = L.apply_norm(x, blk["ffn_norm"], cfg.norm)
@@ -271,7 +303,7 @@ class QuantizedDenseLM:
         return x, new_cache
 
     def _forward(self, params: Params, tokens: jnp.ndarray, cache: Params,
-                 index: jnp.ndarray):
+                 index: jnp.ndarray, block_table=None):
         cfg = self.cfg
         cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
         x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
@@ -279,7 +311,7 @@ class QuantizedDenseLM:
 
         def body(carry, inp):
             blk, c = inp
-            return self._block(carry, blk, c, index)
+            return self._block(carry, blk, c, index, block_table)
 
         x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
         x = L.apply_norm(x, params["final_norm"], cfg.norm)
@@ -295,22 +327,26 @@ class QuantizedDenseLM:
         if fn is None:
             enabled = key[1]
 
-            def wrapped(params, tokens, cache, index):
+            def wrapped(params, tokens, cache, index, block_table=None):
                 with kops.use_kernels(enabled):
-                    return impl(params, tokens, cache, index)
+                    return impl(params, tokens, cache, index, block_table)
 
             fn = self._jit_cache[key] = jax.jit(wrapped)
         return fn
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
-                      cache: Params, index: jnp.ndarray):
+                      cache: Params, index: jnp.ndarray,
+                      block_table: jnp.ndarray | None = None):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated cache. S == 1 with a [B] vector index
         is a per-slot continuous-batching decode step; S > 1 with a
         scalar index is one chunk of a chunked prefill (causal within
-        the chunk, attending to everything already cached)."""
+        the chunk, attending to everything already cached). With
+        `block_table` [B, P] the cache is the engine's page pool and
+        attention runs block-table-native."""
         return self._jitted("forward", self._forward)(
-            params, tokens, cache, jnp.asarray(index, jnp.int32))
+            params, tokens, cache, jnp.asarray(index, jnp.int32),
+            block_table)
 
     def decode_step(self, params: Params, tokens: jnp.ndarray,
                     cache: Params, index: jnp.ndarray):

@@ -1,11 +1,12 @@
 """Paged-KV continuous-batching engine: equivalence + accounting.
 
-The engine's paged gather/scatter must be semantically invisible — for
-every adapter backend (bf16 Model, fake-quant Model, packed-int4
+The engine's block-table-native data path (in-forward page writes + the
+paged-attention kernel walk) must be semantically invisible — for every
+adapter backend (bf16 Model, fake-quant Model, packed-int4
 `QuantizedDenseLM` with bf16/int8/int4 KV pages) the engine's greedy
-generations must match the existing dense-cache path, chunked prefill must
-match stepwise decode, mid-flight admission must not perturb running
-sequences, and pages must never leak across requests.
+generations must match the dense-cache path, chunked prefill must match
+stepwise decode, mid-flight admission must not perturb running sequences,
+and pages must never leak across requests.
 """
 import jax
 import jax.numpy as jnp
@@ -167,6 +168,69 @@ def test_integer_kv_pages_round_trip(stack):
     assert set(eng.kv.pool) == {"k", "v", "k_scale", "v_scale",
                                 "k_zero", "v_zero"}
     assert eng.kv.allocator.n_free == eng.kv.allocator.capacity
+
+
+def test_scheduler_dispatch_is_block_table_native():
+    """Acceptance guard: the scheduler's decode/prefill dispatches must
+    not gather pages into a slab or scatter rows back — the pool and the
+    block tables go straight into `forward_chunk`, and the gather/scatter
+    primitives survive only as the test oracle in `pages.py`."""
+    import ast
+    import inspect
+
+    import repro.serve.engine.scheduler as SCH
+
+    banned = {"gather_pages", "scatter_decode_rows", "scatter_prefill_rows"}
+    for node in ast.walk(ast.parse(inspect.getsource(SCH))):
+        if isinstance(node, ast.Name):
+            assert node.id not in banned, f"scheduler references {node.id}"
+        elif isinstance(node, ast.Attribute):
+            assert node.attr not in banned, f"scheduler references {node.attr}"
+
+
+def test_allocator_stress_many_frees():
+    """Freeing thousands of pages must be cheap (the double-free guard is
+    set-backed, not an O(n) list scan per page) and exact: every page
+    returns, LIFO reuse order holds, and misuse still raises."""
+    n = 4097
+    alloc = PageAllocator(n)
+    rng = np.random.default_rng(0)
+    held = [alloc.alloc(64) for _ in range(64)]    # drain the pool
+    assert alloc.n_free == 0
+    order = rng.permutation(len(held))
+    for i in order:
+        alloc.free(held[i])
+    assert alloc.n_free == alloc.capacity == n - 1
+    assert sorted(p for chunk in held for p in chunk) == list(range(1, n))
+    again = alloc.alloc(n - 1)
+    assert sorted(again) == list(range(1, n))
+    alloc.free(again)
+    with pytest.raises(ValueError):
+        alloc.free([again[0]])                      # double free
+    with pytest.raises(ValueError):
+        alloc.free([n + 5])                         # out of range
+    with pytest.raises(ValueError):
+        alloc.free([0])                             # scratch page
+    probe = alloc.alloc(2)
+    with pytest.raises(ValueError):
+        alloc.free([probe[0], probe[0]])            # intra-batch duplicate
+    assert alloc.n_free == alloc.capacity - 2       # failed frees change nothing
+
+
+def test_block_table_array_rejects_truncation():
+    """A block table narrower than a sequence's page list must raise —
+    silently dropping live pages from the kernel's walk would corrupt
+    generation with no visible failure."""
+    from repro.serve.engine.pages import PagedKVCache
+
+    kv = PagedKVCache({}, n_pages=16, page_size=4)
+    kv.open(0)
+    kv.ensure(0, 11)                                # 3 pages
+    with pytest.raises(ValueError):
+        kv.block_table_array([0], 2)
+    bt = kv.block_table_array([0, None], 4)         # padding is fine
+    assert bt.shape == (2, 4)
+    assert int(bt[0, 3]) == 0 and int(bt[1, 0]) == 0
 
 
 def test_allocator_rejects_double_free_and_oversize():

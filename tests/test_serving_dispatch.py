@@ -73,6 +73,52 @@ def test_prefill_matches_stepwise_decode(packed_setup):
         np.testing.assert_array_equal(np.asarray(pre[:, i]), np.asarray(step))
 
 
+@pytest.mark.parametrize("kv_bits", [None, 8, 4])
+def test_paged_attention_dispatch_matches_reference_bitwise(kv_bits):
+    """`ops.paged_attention` under kernels (interpret mode here) and under
+    `use_kernels(False)` must agree bit for bit — the reference replays
+    the kernel's exact page walk (same shared helpers, same op order), the
+    contract the engine's kernels-on/off equivalence test builds on."""
+    rng = np.random.default_rng(3)
+    b, s, kh, g, dh, t, n_cols, n_pages = 2, 4, 2, 2, 32, 8, 3, 7
+    q = jnp.asarray(rng.standard_normal((b, s, kh * g, dh)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages))[:b * n_cols]
+                     .reshape(b, n_cols), jnp.int32)
+    qpos = jnp.asarray([[9 + j for j in range(s)],
+                        [14 + j for j in range(s)]], jnp.int32)
+    shape = (n_pages, t, kh, dh)
+    if kv_bits is None:
+        kv = {"k": jnp.asarray(rng.standard_normal(shape), jnp.float32),
+              "v": jnp.asarray(rng.standard_normal(shape), jnp.float32)}
+    else:
+        off, levels = 2 ** (kv_bits - 1), 2 ** kv_bits - 1
+        kv = {
+            "k": jnp.asarray(rng.integers(0, levels + 1, shape) - off,
+                             jnp.int8),
+            "v": jnp.asarray(rng.integers(0, levels + 1, shape) - off,
+                             jnp.int8),
+            "k_scale": jnp.asarray(rng.uniform(0.02, 0.2,
+                                               (n_pages, t, kh, 1)),
+                                   jnp.float32),
+            "v_scale": jnp.asarray(rng.uniform(0.02, 0.2,
+                                               (n_pages, t, kh, 1)),
+                                   jnp.float32),
+            "k_zero": jnp.asarray(
+                np.round(rng.uniform(-12, 2, (n_pages, t, kh, 1))),
+                jnp.float32),
+            "v_zero": jnp.asarray(
+                np.round(rng.uniform(-12, 2, (n_pages, t, kh, 1))),
+                jnp.float32),
+        }
+    outs = {}
+    for enabled in (True, False):
+        with kops.use_kernels(enabled):
+            outs[enabled] = np.asarray(kops.paged_attention(
+                q, kv, bt, qpos, rope_theta=500000.0, kv_bits=kv_bits,
+                kv_group=dh if kv_bits else None))
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
 def test_decode_uses_dispatch_not_ref():
     """The serving module must go through the ops dispatch layer only —
     no direct kernels.ref calls on the hot path."""

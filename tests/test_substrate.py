@@ -337,6 +337,91 @@ def test_batch_scheduler_temperature_uses_rng(small_lm):
     assert hot_a != hot_b
 
 
+def _engine_generate(small_lm, sampling_kw, *, seed=0, n_req=2, max_new=8):
+    from repro.serve.engine import (EngineRequest, SamplingParams,
+                                    ServeEngine, as_servable)
+    cfg, model, params = small_lm
+    eng = ServeEngine(as_servable(model, params), n_pages=33, page_size=8,
+                      max_seqs=2, prefill_chunk=4, seed=seed)
+    for i in range(n_req):
+        eng.submit(EngineRequest(
+            rid=i, prompt=[5 + i, 9, 3],
+            sampling=SamplingParams(max_new=max_new, **sampling_kw)))
+    return {r.rid: r for r in eng.run()}, eng
+
+
+def test_engine_top_k1_equals_greedy(small_lm):
+    """top_k=1 collapses sampling to argmax even at high temperature —
+    the fused `_sample_tokens` filter must win over the categorical."""
+    greedy, _ = _engine_generate(small_lm, {"temperature": 0.0})
+    top1, _ = _engine_generate(small_lm, {"temperature": 8.0, "top_k": 1})
+    for rid in greedy:
+        assert top1[rid].generated == greedy[rid].generated
+
+
+def test_engine_top_p_tiny_equals_greedy(small_lm):
+    """A nucleus smaller than the top token's probability keeps exactly
+    the argmax token."""
+    greedy, _ = _engine_generate(small_lm, {"temperature": 0.0})
+    nucleus, _ = _engine_generate(small_lm, {"temperature": 0.5,
+                                             "top_p": 1e-6})
+    for rid in greedy:
+        assert nucleus[rid].generated == greedy[rid].generated
+
+
+def test_engine_top_k_sampling_stochastic_and_reproducible(small_lm):
+    """With a wide top-k at high temperature the engine must still sample
+    (diverge from greedy), reproduce for a fixed seed, and respect the
+    filter (every token inside the per-step top-k set)."""
+    greedy, _ = _engine_generate(small_lm, {"temperature": 0.0})
+    kw = {"temperature": 8.0, "top_k": 50}
+    hot_a, _ = _engine_generate(small_lm, kw, seed=0)
+    hot_b, _ = _engine_generate(small_lm, kw, seed=1)
+    gen = lambda d: [d[r].generated for r in sorted(d)]
+    assert gen(hot_a) != gen(greedy)
+    assert gen(hot_a) == gen(_engine_generate(small_lm, kw, seed=0)[0])
+    assert gen(hot_a) != gen(hot_b)
+
+
+def test_engine_rejects_bad_sampling_params(small_lm):
+    from repro.serve.engine import (EngineRequest, SamplingParams,
+                                    ServeEngine, as_servable)
+    cfg, model, params = small_lm
+    eng = ServeEngine(as_servable(model, params), n_pages=17, page_size=8)
+    for bad in ({"top_k": -1}, {"top_p": 0.0}, {"top_p": 1.5},
+                {"stop": ((),)}):
+        with pytest.raises(ValueError):
+            eng.submit(EngineRequest(rid=0, prompt=[1, 2],
+                                     sampling=SamplingParams(**bad)))
+
+
+def test_engine_stop_sequences_halt_generation(small_lm):
+    """Per-request stop sequences end generation at the first suffix
+    match (the matched tokens are kept), pages are freed, and a
+    multi-token stop only fires on the full contiguous match."""
+    greedy, _ = _engine_generate(small_lm, {}, n_req=1, max_new=8)
+    full = greedy[0].generated
+    assert len(full) == 8
+
+    def expected_cut(stop_seq):
+        n = len(stop_seq)
+        for i in range(n, len(full) + 1):
+            if full[i - n:i] == list(stop_seq):
+                return full[:i]
+        return full
+
+    one_tok = (full[2],)
+    multi = tuple(full[1:3])
+    for stop in (one_tok, multi):
+        got, eng = _engine_generate(small_lm, {"stop": (stop,)},
+                                    n_req=1, max_new=8)
+        want = expected_cut(stop)
+        assert got[0].generated == want, (stop, got[0].generated, want)
+        assert got[0].stop_hit == (len(want) < 8)
+        assert eng.kv.allocator.n_free == eng.kv.allocator.capacity
+        assert not eng.kv.tables
+
+
 def test_batch_scheduler_slot_reuse_matches_fresh(small_lm):
     """Regression: a readmitted request landing in a previously used slot
     (stale KV, pos reset to 0) must decode exactly as on a fresh
