@@ -8,9 +8,25 @@ decode-step latency pair for the dispatched serving path — reference
 (`use_kernels(False)`) vs kernel dispatch — so the serving-path win (or,
 on this CPU host, the interpret-mode overhead) is recorded in the bench
 trajectory alongside the per-op numbers.
+
+Also benchmarks the flash-decoding paged-attention kernel across context
+length × head count × `kv_splits`, and — the headline of the scale-out PR —
+the ragged early-exit: each row reports the pages walked per decode step
+with the walk trimmed to each sequence's live pages versus the full-table
+walk the pre-flash-decode kernel did (`batch · n_cols`), plus both wall
+times. The work reduction is real even in interpret mode on this host:
+skipped columns run neither their page copy nor their softmax update.
+
+Rows are appended to `artifacts/BENCH_kernels.json` so the kernel perf
+trajectory is tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -19,6 +35,13 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+
+try:
+    from .common import ragged_paged_batch
+except ImportError:                      # run as a plain script
+    from common import ragged_paged_batch
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
 HBM_BW = 819e9
 PEAK = 197e12
@@ -34,7 +57,7 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(argv=None):
+def hadamard_rows():
     m, d, b = 2048, 8192, 32
     x = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
 
@@ -47,18 +70,29 @@ def main(argv=None):
     bytes_fused = m * d * 2 + m * d * 1 + m * 8
     flops_rot = 2 * m * d * b
 
+    rows = []
     print("# kernel model (v5e bf16) + CPU jnp reference timing")
     print("op,cpu_ref_us,model_bytes,model_flops,v5e_time_us,bound")
     t_mem = m * d * 2 * 2 / HBM_BW * 1e6
     t_cmp = flops_rot / PEAK * 1e6
+    rows.append({"op": f"block_hadamard_b{b}", "cpu_ref_us": round(us_rot),
+                 "model_bytes": m * d * 4, "model_flops": flops_rot,
+                 "v5e_time_us": round(max(t_mem, t_cmp), 1),
+                 "bound": "memory" if t_mem > t_cmp else "compute"})
     print(f"block_hadamard_b{b},{us_rot:.0f},{m*d*4},{flops_rot},"
           f"{max(t_mem,t_cmp):.1f},{'memory' if t_mem>t_cmp else 'compute'}")
     t_mem_f = bytes_fused / HBM_BW * 1e6
+    rows.append({"op": f"hadamard_quant_fused_b{b}",
+                 "cpu_ref_us": round(us_fused), "model_bytes": bytes_fused,
+                 "model_flops": flops_rot,
+                 "v5e_time_us": round(max(t_mem_f, t_cmp), 1),
+                 "bound": "memory"})
     print(f"hadamard_quant_fused_b{b},{us_fused:.0f},{bytes_fused},"
           f"{flops_rot},{max(t_mem_f,t_cmp):.1f},memory")
     saving = 1 - bytes_fused / bytes_unfused
+    rows.append({"op": "fusion_hbm_byte_saving", "value": round(saving, 3)})
     print(f"fusion_hbm_byte_saving,{saving:.3f}")
-    decode_step_bench()
+    return rows
 
 
 def decode_step_bench(iters: int = 3):
@@ -80,6 +114,7 @@ def decode_step_bench(iters: int = 3):
     tok = jnp.asarray([[7]], jnp.int32)
     idx = jnp.asarray(3, jnp.int32)
 
+    rows = []
     print("serving_path,decode_step_us")
     for label, enabled in (("ref", False), ("kernels", True)):
         with kops.use_kernels(enabled):
@@ -89,7 +124,100 @@ def decode_step_bench(iters: int = 3):
             for _ in range(iters):
                 out, _ = qlm.decode_step(packed, tok, cache, idx)
                 out.block_until_ready()
-        print(f"decode_{label},{(time.perf_counter() - t0) / iters * 1e6:.0f}")
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append({"op": f"decode_{label}", "decode_step_us": round(us)})
+        print(f"decode_{label},{us:.0f}")
+    return rows
+
+
+def paged_attention_bench(*, smoke: bool, iters: int = 5):
+    """Flash-decoding paged attention: context × heads × kv_splits, and
+    the ragged early-exit's pages-walked-per-step reduction.
+
+    One decode step (S = 1) over a ragged batch whose sequence lengths
+    span 25%..100% of the context budget. `full_walk` forces
+    `seq_lengths` to the table capacity — every instance walks every
+    column, which is exactly what the PR 3 `(batch, page)` grid did — and
+    `early_exit` passes the true lengths. Pages walked per step is the
+    analytic `Σ_b ceil(len_b / page_size)` vs `batch · n_cols`; the wall
+    times show the skip is real work deleted (no page copy, no softmax
+    update), interpret-mode overhead included.
+    """
+    page_size, batch, dh = 16, 4, 64
+    cases = ([(64, 2, 4, 1), (64, 2, 4, 4)] if smoke else
+             [(256, 2, 8, 1), (256, 2, 8, 4),
+              (1024, 2, 8, 1), (1024, 2, 8, 4), (1024, 2, 8, 8),
+              (1024, 8, 32, 4)])
+    rng = np.random.default_rng(0)
+    rows = []
+    print("op,ctx,kv_heads,q_heads,kv_splits,pages_per_step,us_per_step")
+    for ctx, kh, h, kv_splits in cases:
+        n_cols = ctx // page_size
+        lengths, n_pages, table, positions = ragged_paged_batch(
+            batch, ctx, page_size)
+        kv = {"k": jnp.asarray(rng.standard_normal(
+                  (n_pages, page_size, kh, dh)), jnp.float32),
+              "v": jnp.asarray(rng.standard_normal(
+                  (n_pages, page_size, kh, dh)), jnp.float32)}
+        bt = jnp.asarray(table, jnp.int32)
+        qpos = jnp.asarray(positions, jnp.int32)
+        q = jnp.asarray(rng.standard_normal((batch, 1, h, dh)), jnp.float32)
+        true_lens = jnp.asarray(lengths, jnp.int32)
+        full_lens = jnp.full((batch,), n_cols * page_size, jnp.int32)
+
+        walked = {"full_walk": batch * n_cols,
+                  "early_exit": sum(-(-n // page_size) for n in lengths)}
+        for label, lens in (("full_walk", full_lens),
+                            ("early_exit", true_lens)):
+            fn = jax.jit(lambda lens=lens: kops.paged_attention(
+                q, kv, bt, qpos, lens, kv_splits=kv_splits))
+            fn().block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = fn()
+            out.block_until_ready()
+            us = (time.perf_counter() - t0) / iters * 1e6
+            rows.append({
+                "op": f"paged_attention_{label}", "ctx": ctx,
+                "kv_heads": kh, "q_heads": h, "kv_splits": kv_splits,
+                "page_size": page_size, "batch": batch,
+                "pages_per_step": walked[label],
+                "us_per_step": round(us, 1),
+            })
+            print(f"paged_attention_{label},{ctx},{kh},{h},{kv_splits},"
+                  f"{walked[label]},{us:.1f}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI: compiles every bench path "
+                    "once, minimal wall time")
+    ap.add_argument("--out", default=os.path.join(ART, "BENCH_kernels.json"))
+    args = ap.parse_args(argv)
+
+    rows = []
+    if not args.smoke:
+        rows += hadamard_rows()
+    rows += paged_attention_bench(smoke=args.smoke)
+    rows += decode_step_bench()
+
+    out = {
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "smoke": bool(args.smoke),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    history = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            history = json.load(f).get("history", [])
+    history.append(out)
+    with open(args.out, "w") as f:
+        json.dump({"history": history}, f, indent=1)
+    print(f"wrote {args.out} ({len(history)} entries)")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,12 @@ Each row reports tokens/s and the bytes of KV materialised into a slab
 per step — the copy traffic the paged kernel deletes (0 for the paged
 row: pages are read in place).
 
+Engine rows additionally record walked-pages-per-decode-step: the pages
+the flash-decoding kernel's ragged early-exit actually visits
+(`Σ ceil(len/page_size)` per dispatch) vs the padded-batch × full-table
+walk of the pre-scale-out kernel — the work reduction of the early-exit,
+independent of this host's interpret-mode wall-clock caveat.
+
     PYTHONPATH=src python benchmarks/serve_bench.py [--smoke]
 """
 from __future__ import annotations
@@ -76,10 +82,12 @@ def bench_legacy(model, params, prompts, max_new, slots, max_len):
         for rid, p in enumerate(prompts):
             sched.submit(Request(rid=rid, prompt=list(p), max_new=max_new))
 
-    return _drive(submit, lambda: done.extend(sched.step()),
-                  lambda: bool(sched.queue or sched.active),
-                  lambda: sum(len(r.generated) for r in done)
-                  + sum(len(r.generated) for r in sched.active.values()))
+    wall, lat, steps = _drive(
+        submit, lambda: done.extend(sched.step()),
+        lambda: bool(sched.queue or sched.active),
+        lambda: sum(len(r.generated) for r in done)
+        + sum(len(r.generated) for r in sched.active.values()))
+    return wall, lat, steps, None
 
 
 def bench_engine(adapter, prompts, max_new, slots, max_len, page_size,
@@ -94,19 +102,36 @@ def bench_engine(adapter, prompts, max_new, slots, max_len, page_size,
 
     def submit():
         done.clear()
+        # reset at each round boundary so the counters cover exactly the
+        # measured trace (the warmup round re-runs the same requests)
+        eng.pages_walked = eng.pages_walked_dense = 0
         for rid, p in enumerate(prompts):
             eng.submit(EngineRequest(
                 rid=rid, prompt=list(p),
                 sampling=SamplingParams(max_new=max_new)))
 
-    return _drive(submit, lambda: done.extend(eng.step()),
-                  lambda: bool(eng.queue or eng.active),
-                  lambda: sum(len(r.generated) for r in done)
-                  + sum(len(r.generated) for r in eng.active))
+    wall, lat, steps = _drive(
+        submit, lambda: done.extend(eng.step()),
+        lambda: bool(eng.queue or eng.active),
+        lambda: sum(len(r.generated) for r in done)
+        + sum(len(r.generated) for r in eng.active))
+    # walked-pages accounting across the measured trace: what the ragged
+    # early-exit actually walked vs the padded-batch × full-table walk of
+    # the pre-flash-decode kernel (per attention dispatch, per layer)
+    pages = {"pages_walked": eng.pages_walked,
+             "pages_walked_dense": eng.pages_walked_dense}
+    return wall, lat, steps, pages
 
 
 def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
-    """Slab-gather vs paged-kernel decode attention over one page pool."""
+    """Slab-gather vs paged-kernel decode attention over one page pool.
+
+    The batch is ragged (lengths span 25%..100% of `seq_len`) so the
+    paged rows also show the flash-decoding early-exit: the slab path
+    gathers — and the pre-flash-decode kernel walked — every table column
+    of every slot, while the kernel now walks `Σ ceil(len/page_size)`
+    live pages per step (reported as pages_walked_per_step).
+    """
     import math
 
     import jax.numpy as jnp
@@ -115,20 +140,26 @@ def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
     from repro.serve.engine import pages as PG
     from repro.serve.engine.pages import pages_for
 
+    try:
+        from .common import ragged_paged_batch
+    except ImportError:                  # run as a plain script
+        from common import ragged_paged_batch
+
     nl, kh, dh, h = (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim,
                      cfg.n_heads)
     per_seq = pages_for(seq_len, page_size)
-    n_pages = 1 + slots * per_seq
     rng = np.random.default_rng(0)
+    lengths, n_pages, table, positions = ragged_paged_batch(
+        slots, seq_len, page_size)
     pool = {
         "k": jnp.asarray(rng.standard_normal(
             (nl, n_pages, page_size, kh, dh)), jnp.float32),
         "v": jnp.asarray(rng.standard_normal(
             (nl, n_pages, page_size, kh, dh)), jnp.float32),
     }
-    bt = jnp.asarray(
-        np.arange(1, n_pages).reshape(slots, per_seq), jnp.int32)
-    qpos = jnp.full((slots, 1), seq_len - 1, jnp.int32)
+    bt = jnp.asarray(table, jnp.int32)
+    qpos = jnp.asarray(positions, jnp.int32)
+    lens = jnp.asarray(lengths, jnp.int32)
     q = jnp.asarray(rng.standard_normal((nl, slots, 1, h, dh)), jnp.float32)
 
     def slab_attn(ql, k_all, v_all):
@@ -151,10 +182,14 @@ def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
     def paged_step(pool, q):
         return jnp.stack([
             kops.paged_attention(
-                q[l], {"k": pool["k"][l], "v": pool["v"][l]}, bt, qpos)
+                q[l], {"k": pool["k"][l], "v": pool["v"][l]}, bt, qpos,
+                lens)
             for l in range(nl)])
 
     slab_bytes = 2 * nl * slots * per_seq * page_size * kh * dh * 4
+    walked = {"attn_slab_gather": slots * per_seq,
+              "attn_paged_kernel": sum(pages_for(n, page_size)
+                                       for n in lengths)}
 
     rows = []
     for name, fn, gathered in (("attn_slab_gather", slab_step, slab_bytes),
@@ -169,6 +204,7 @@ def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
             "path": name,
             "tokens_per_s": round(slots * iters / wall, 2),
             "gathered_bytes_per_step": gathered,
+            "pages_walked_per_step": walked[name],
             "seq_len": seq_len,
             "page_size": page_size,
             "wall_s": round(wall, 4),
@@ -224,9 +260,10 @@ def main(argv=None):
     }
 
     rows = []
-    print("path,tokens_per_s,p50_ms,p95_ms,gen_tokens,steps,wall_s")
+    print("path,tokens_per_s,p50_ms,p95_ms,gen_tokens,steps,wall_s,"
+          "pages_walked_per_step,pages_dense_per_step")
     for name, fn in runs.items():
-        wall, lat, steps = fn()
+        wall, lat, steps, pages = fn()
         gen = len(lat)
         # `steps` = scheduler iterations (≈ batched forward passes): the
         # hardware-independent scheduling win — chunked prefill needs far
@@ -241,8 +278,19 @@ def main(argv=None):
             "steps": steps,
             "wall_s": round(wall, 3),
         }
+        if pages is not None:
+            # the ragged early-exit's work reduction per attention
+            # dispatch: live pages walked vs the padded batch × full
+            # table the pre-flash-decode kernel walked
+            row["pages_walked_per_step"] = round(
+                pages["pages_walked"] / max(steps, 1), 2)
+            row["pages_dense_per_step"] = round(
+                pages["pages_walked_dense"] / max(steps, 1), 2)
         rows.append(row)
-        print(",".join(str(row[k]) for k in row))
+        print(",".join(str(row.get(k, "")) for k in (
+            "path", "tokens_per_s", "p50_ms", "p95_ms", "gen_tokens",
+            "steps", "wall_s", "pages_walked_per_step",
+            "pages_dense_per_step")))
 
     # attention data path in isolation: the slab round trip vs the
     # block-table-native kernel walk over the identical page pool

@@ -38,6 +38,29 @@ def _divisor_tile(dim: int, pref: int, *, multiple: int = 1) -> int:
                      f"divides {dim}")
 
 
+def _tile_or_pad(dim: int, pref: int, *, multiple: int = 1) -> tuple[int, int]:
+    """(tile, padded_dim) for an awkward dimension.
+
+    Prefers an exact divisor tile (padded_dim == dim). A dimension whose
+    only divisors ≤ `pref` are tiny — e.g. 2·prime projection widths,
+    where the best "tile" is 1 or 2 — would either hard-fail or crawl, so
+    it falls back to the preferred tile with zero padding: padded rows of
+    the activation/weight operands contribute exactly zero to every real
+    output element (0-codes × 0-weights, and zero weight columns add
+    nothing to the colsum correction), and the pad is sliced off the
+    result.
+    """
+    try:
+        t = _divisor_tile(dim, pref, multiple=multiple)
+        if t >= min(pref, 8, dim):
+            return t, dim
+    except ValueError:
+        pass
+    t = max(multiple, min(pref, -(-dim // multiple) * multiple))
+    t -= t % multiple
+    return t, dim + (-dim) % t
+
+
 def _kernel(qa_ref, wp_ref, sa_ref, za_ref, sw_ref, colsum_ref, o_ref,
             acc_ref, *, n_k):
     k_idx = pl.program_id(2)
@@ -84,31 +107,43 @@ def int4_matmul(act_codes: jnp.ndarray, act_scale: jnp.ndarray,
         raise ValueError(f"packed K mismatch: acts K={k}, weights K={2 * k2}")
     w_scale = w_scale.reshape(1, n).astype(jnp.float32)
 
+    tm = min(tm, max(8, m))
+    tn, np_ = _tile_or_pad(n, tn)
+    tk, kp = _tile_or_pad(k, tk, multiple=2)
+    if np_ > n:
+        # zero weight columns (and unit scales, so the 0·0 epilogue stays
+        # finite); their outputs are sliced off below
+        w_packed = jnp.pad(w_packed, ((0, 0), (0, np_ - n)))
+        w_scale = jnp.pad(w_scale, ((0, 0), (0, np_ - n)),
+                          constant_values=1)
+    if kp > k:
+        # zero activation codes against zero weight rows: 0·0 adds nothing
+        # to the integer product, and zero rows leave the colsum
+        # correction unchanged
+        act_codes = jnp.pad(act_codes, ((0, 0), (0, kp - k)))
+        w_packed = jnp.pad(w_packed, ((0, (kp - k) // 2), (0, 0)))
+
     # Precompute per-channel weight-code column sums (int32) for the
-    # asymmetric-activation correction term.
+    # asymmetric-activation correction term (after padding — zero rows
+    # are exact no-ops).
     lo = (w_packed & 0xF).astype(jnp.int32)
     hi = ((w_packed >> 4) & 0xF).astype(jnp.int32)
     lo = jnp.where(lo >= 8, lo - 16, lo)
     hi = jnp.where(hi >= 8, hi - 16, hi)
-    colsum = (jnp.sum(lo, axis=0) + jnp.sum(hi, axis=0)).reshape(1, n)
+    colsum = (jnp.sum(lo, axis=0) + jnp.sum(hi, axis=0)).reshape(1, np_)
 
-    tm = min(tm, max(8, m))
-    tn = _divisor_tile(n, tn)
-    tk = _divisor_tile(k, tk, multiple=2)
     pad_m = (-m) % tm
     if pad_m:
         act_codes = jnp.pad(act_codes, ((0, pad_m), (0, 0)))
         act_scale = jnp.pad(act_scale, ((0, pad_m), (0, 0)), constant_values=1)
         act_zero = jnp.pad(act_zero, ((0, pad_m), (0, 0)))
     mp = act_codes.shape[0]
-    if n % tn or k % tk or (tk % 2):
-        raise ValueError(f"N={n} K={k} must tile by (tn={tn}, tk={tk})")
-    n_k = k // tk
+    n_k = kp // tk
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
-        out_shape=jax.ShapeDtypeStruct((mp, n), out_dtype),
-        grid=(mp // tm, n // tn, n_k),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        grid=(mp // tm, np_ // tn, n_k),
         in_specs=[
             pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((tk // 2, tn), lambda i, j, kk: (kk, j)),
@@ -122,6 +157,6 @@ def int4_matmul(act_codes: jnp.ndarray, act_scale: jnp.ndarray,
         interpret=interpret,
     )(act_codes, w_packed, act_scale, act_zero, w_scale, colsum)
 
-    if pad_m:
-        out = out[:m]
+    if pad_m or np_ > n:
+        out = out[:m, :n]
     return out

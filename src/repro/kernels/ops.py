@@ -127,26 +127,38 @@ def int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
 
 
 def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
-                    q_positions: jnp.ndarray, *,
+                    q_positions: jnp.ndarray,
+                    seq_lengths: jnp.ndarray | None = None, *,
                     rope_theta: float | None = None,
                     kv_bits: int | None = None,
-                    kv_group: int | None = None) -> jnp.ndarray:
+                    kv_group: int | None = None,
+                    q_block: int | None = None,
+                    kv_splits: int | None = None,
+                    head_block: int | None = None) -> jnp.ndarray:
     """Block-table-native causal attention over one layer's KV page pool.
 
     q [B, S, H, Dh] (already rotated), kv pages [n_pages, T, KH, Dh]
     (float post-RoPE K, or int8/int4 codes + scale/zero pages with
     `kv_bits`/`kv_group` set — dequant and the pre-RoPE K rotation happen
-    inside the walk), block_tables [B, P] int32, q_positions [B, S].
+    inside the walk), block_tables [B, P] int32, q_positions [B, S],
+    seq_lengths [B] optional true context lengths — the ragged early-exit
+    skips every table column past ceil(len/page_size) (0 skips a padded
+    row's walk entirely). `q_block`/`kv_splits`/`head_block` tile the
+    flash-decoding grid (`resolve_tiling` defaults); both paths resolve
+    them identically, so the split/combine reduction order matches.
     Pallas on TPU, interpret elsewhere, the bit-identical jnp page walk
     under `use_kernels(False)`. Returns [B, S, H, Dh] f32.
     """
     if not kernels_enabled():
         return _ref.paged_attention_ref(
-            q, kv, block_tables, q_positions, rope_theta=rope_theta,
-            kv_bits=kv_bits, kv_group=kv_group)
-    return _pa_kernel(q, kv, block_tables, q_positions,
+            q, kv, block_tables, q_positions, seq_lengths,
+            rope_theta=rope_theta, kv_bits=kv_bits, kv_group=kv_group,
+            q_block=q_block, kv_splits=kv_splits, head_block=head_block)
+    return _pa_kernel(q, kv, block_tables, q_positions, seq_lengths,
                       rope_theta=rope_theta, kv_bits=kv_bits,
-                      kv_group=kv_group, interpret=not _on_tpu())
+                      kv_group=kv_group, q_block=q_block,
+                      kv_splits=kv_splits, head_block=head_block,
+                      interpret=not _on_tpu())
 
 
 def infer_int4_scales(w: jnp.ndarray) -> jnp.ndarray:

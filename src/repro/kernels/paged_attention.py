@@ -1,16 +1,41 @@
-"""Pallas TPU kernel: block-table-native paged causal attention.
+"""Pallas TPU kernel: flash-decoding block-table-native paged causal attention.
 
-The serving engine used to gather every active sequence's KV pages into a
-contiguous `[n_layers, B, P·page_size, ...]` slab, run dense attention on
-it, and scatter the new rows back — one full HBM round trip of the whole
-active context per decode step. This kernel deletes the slab: the grid is
-`(batch, page_columns)` and each instance walks one sequence's block table
-directly, DMA-ing one `[page_size, KH, Dh]` page at a time into VMEM via
-scalar-prefetched page ids (`PrefetchScalarGridSpec` — the block-spec
-index map reads `block_tables[b, p]` to pick which pool page to fetch).
-Softmax runs online across the page walk (flash-style m/l/acc VMEM
-accumulators, the page axis innermost so they stay resident), and the
-output block is written once on the last page column.
+The first block-table-native kernel (PR 3) deleted the gather-to-slab round
+trip, but its grid was `(batch, page_column)`: one grid instance serially
+walked *every* table column of a sequence — scratch-padded columns included
+— while all KV heads and every query row of a prefill chunk shared that
+instance's VMEM accumulators. This rewrite scales the walk out across every
+axis the hardware can parallelise:
+
+    grid = (batch, kv_head_block, q_block, kv_split, page_column)
+
+  * **KV-head and query-block axes** — each `(head_block, q_block)` tile
+    owns its own `m/l/acc` VMEM scratch, so many-head configs and long
+    prefill chunks spread over cores instead of serialising in one
+    instance (the four outer axes are marked `parallel` for Mosaic; the
+    page axis stays `arbitrary` since the online softmax is a carried
+    reduction).
+  * **Split-K page partitions** — the page axis is cut into `kv_splits`
+    independent partial walks. Each split emits flash-decoding partials
+    `(m, l, acc)`; a second LSE-combine kernel merges them with the
+    standard log-sum-exp reweighting. Decode (S == 1) gets context-length
+    parallelism this way: a 32-page context becomes `kv_splits` concurrent
+    8-page walks plus one tiny combine.
+  * **Ragged early-exit** — per-sequence used-page counts are
+    scalar-prefetched alongside the block table, and every instance
+    `pl.when`-skips columns past its sequence's last live page: neither
+    the page DMA nor the softmax update runs for pad/scratch columns. The
+    pages walked per decode step drop from `batch · n_cols` to
+    `Σ_b ceil(len_b / page_size)` — a real work reduction for ragged
+    batches (exact by construction: a fully-masked page leaves `m/l/acc`
+    bitwise unchanged, so skipping it is a bit-for-bit no-op).
+  * **Double-buffered page DMA** — the K/V code pages (the dominant byte
+    stream) live in `ANY`/HBM and are copied into a two-slot VMEM buffer
+    with `pltpu.make_async_copy`: the copy for column `p+1` is issued
+    before the softmax update of column `p` consumes slot `p % 2`, so the
+    DMA of the next page overlaps the current update in the Mosaic path
+    (the tiny scale/zero pages ride the regular BlockSpec pipeline, which
+    Mosaic double-buffers on its own).
 
 Three KV page formats are served by the same walk:
 
@@ -22,15 +47,17 @@ Three KV page formats are served by the same walk:
     position of each page row.
 
 Every arithmetic step lives in a small jnp helper shared with
-`kernels.ref.paged_attention_ref`, which replays the identical page walk
-on a gathered view — that is what makes the dispatch-vs-reference
-comparison bit-for-bit in interpret mode, the same contract
+`kernels.ref.paged_attention_ref`, which replays the *identical*
+split/combine reduction order (same per-split column walk, same skip
+select, same LSE combine) on a gathered view — that is what keeps the
+dispatch-vs-reference comparison bit-for-bit in interpret mode for every
+`(q_block, kv_splits, head_block)` configuration, the contract
 `hadamard_quant`/`int4_matmul` already meet.
 
-Padding is handled entirely by the causal mask: pad block-table entries
-point at the scratch page, whose rows sit at slab positions greater than
-every query position, so `kpos <= qpos` hides them exactly as it hides a
-sequence's own not-yet-written rows.
+Padding is handled by the causal mask plus the early-exit: pad block-table
+entries point at the scratch page and sit past the used-page count, so they
+are skipped outright; rows of the last live page beyond the fill point are
+hidden by `kpos <= qpos` exactly as a sequence's own not-yet-written rows.
 """
 from __future__ import annotations
 
@@ -43,7 +70,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_attention", "paged_attention_reference"]
+__all__ = ["paged_attention", "paged_attention_reference", "resolve_tiling",
+           "used_page_counts", "rope_frequencies"]
 
 MASK_VALUE = -1e30
 
@@ -53,13 +81,16 @@ MASK_VALUE = -1e30
 # ---------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
-    """Mirror of `models.layers.rope_frequencies` (kernels sit below the
-    model layer, so the three lines are duplicated rather than imported).
+    """Twin of `models.layers.rope_frequencies` — duplicated on purpose,
+    and pinned to it by `tests/test_kernels.py::
+    test_rope_frequency_literals_agree` (≤ 2 ulp) so it cannot drift.
 
     Computed host-side in numpy so the kernel operand and the reference's
     traced constant embed the *identical* literal — `pow` rounds a ulp
     differently between XLA's eager dispatch and constant folding, which
-    would break the kernel-vs-reference bit-for-bit contract."""
+    would break the kernel-vs-reference bit-for-bit contract. That same
+    rounding gap is why the model keeps its own traced-jnp twin: swapping
+    it onto this literal shifts every rotation by the ulp difference."""
     freqs = 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
                              / np.float32(head_dim)))
     return jnp.asarray(freqs, jnp.float32)
@@ -96,9 +127,11 @@ def page_update(m, l, acc, q, k, v, qpos, kpos, scale):
     """One online-softmax step over a single KV page.
 
     q [S, KH, G, Dh] f32, k/v [T, KH, Dh] f32, qpos [S], kpos [T];
-    m/l [KH, G, S], acc [KH, G, S, Dh]. Fully-masked pages contribute
-    exactly zero (exp underflows), so scratch-padded table columns are
-    free no-ops.
+    m/l [KH, G, S], acc [KH, G, S, Dh]. KH/S may be the per-instance
+    `head_block`/`q_block` tiles — every element's trajectory is
+    independent, so tiling does not change a single bit. Fully-masked
+    pages contribute exactly zero (exp underflows), so scratch-padded
+    table columns are free no-ops.
     """
     logits = jnp.einsum("skgd,tkd->kgst", q, k) * scale
     valid = kpos[None, :] <= qpos[:, None]                   # [S, T]
@@ -119,18 +152,148 @@ def finalize(l, acc):
     return jnp.einsum("kgsd->skgd", out).reshape(s, kh * g, dh)
 
 
+def combine_partials(m, l, acc):
+    """LSE-merge `kv_splits` flash-decoding partials into the output tile.
+
+    m/l [KS, H, S], acc [KS, H, S, Dh] (H may be a `head_block · G` tile,
+    S a `q_block` tile) → [S, H, Dh] f32. Splits that saw no live page
+    carry m = -inf; their weight is forced to exactly zero so empty
+    partitions are bit-for-bit no-ops (matching the in-walk skip).
+    """
+    mx = jnp.max(m, axis=0)                                  # [H, S]
+    w = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - mx[None]))
+    l_tot = jnp.sum(l * w, axis=0)                           # [H, S]
+    acc_tot = jnp.sum(acc * w[..., None], axis=0)            # [H, S, Dh]
+    out = acc_tot / jnp.maximum(l_tot[..., None], 1e-30)
+    return jnp.einsum("hsd->shd", out)
+
+
 # ---------------------------------------------------------------------------
-# Kernel
+# Tiling resolution (shared by the kernel dispatch and the reference)
 # ---------------------------------------------------------------------------
 
-def _kernel(bt_ref, *refs, s, kh, g, dh, t, scale, bits, group, theta):
+def _largest_divisor(n: int, cap: int) -> int:
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+# Decode split-K defaults: FIXED-WIDTH partitions (4 table columns per
+# split, up to 8 splits). The resolver pins the split WIDTH and derives
+# the split count from it — never `width = ceil(n_cols / kv_splits)`,
+# which would move partition boundaries whenever the table widens. Fixed
+# boundaries keep scratch-column widening bit-exact: widening only
+# appends splits past every used-page count, whose partials carry
+# m = -inf and thus exactly zero combine weight. Past
+# `SPLIT_PAGE_COLS · MAX_KV_SPLITS` columns the cap forces wider splits,
+# so boundaries do shift at table-width doublings there — a ulp-level
+# effect covered by the engine's tolerance contract, not the bitwise one.
+SPLIT_PAGE_COLS = 4
+MAX_KV_SPLITS = 8
+
+
+def resolve_tiling(s: int, kh: int, n_cols: int,
+                   q_block: int | None = None,
+                   kv_splits: int | None = None,
+                   head_block: int | None = None
+                   ) -> tuple[int, int, int, int]:
+    """Shape-driven defaults for the grid axes — resolved identically on
+    the kernel and reference paths so a `(q_block, kv_splits, head_block)`
+    request means the same reduction order on both. Returns
+    `(q_block, kv_splits, head_block, split_cols)` where `split_cols` is
+    the page-column width of every split partition (the table is padded
+    to `kv_splits · split_cols` scratch columns).
+
+      * q_block: ≤ 8 query rows per instance (decode S=1 → 1, an 8-token
+        prefill chunk → one block, a 32-token chunk → 4 blocks).
+      * head_block: 1 KV head per instance — maximum head parallelism;
+        the G query heads of the group ride along.
+      * kv_splits: decode steps (S == 1) partition the page walk into
+        fixed `SPLIT_PAGE_COLS`-wide splits, up to `MAX_KV_SPLITS`
+        (context-length parallelism for the latency-critical path);
+        prefill keeps one walk per (head, q-block) instance, which is
+        already wide. An explicit `kv_splits` request gets equal-width
+        `ceil(n_cols / kv_splits)` partitions instead.
+    """
+    if q_block is None:
+        q_block = _largest_divisor(s, min(s, 8))
+    if head_block is None:
+        head_block = 1
+    if kv_splits is None:
+        if s == 1 and n_cols > SPLIT_PAGE_COLS:
+            # width first, count second: boundaries at fixed multiples of
+            # split_cols stay put when the table widens (see above)
+            split_cols = max(SPLIT_PAGE_COLS, -(-n_cols // MAX_KV_SPLITS))
+            kv_splits = -(-n_cols // split_cols)
+        else:
+            kv_splits, split_cols = 1, n_cols
+    else:
+        kv_splits = max(1, min(kv_splits, n_cols))
+        split_cols = -(-n_cols // kv_splits)
+    if s % q_block:
+        raise ValueError(f"q_block {q_block} does not divide q_len {s}")
+    if kh % head_block:
+        raise ValueError(f"head_block {head_block} does not divide "
+                         f"n_kv_heads {kh}")
+    return q_block, kv_splits, head_block, split_cols
+
+
+def used_page_counts(q_positions: jnp.ndarray,
+                     seq_lengths: jnp.ndarray | None,
+                     page_size: int, n_cols: int) -> jnp.ndarray:
+    """[B] number of live table columns per sequence: ceil(len/page_size).
+
+    `seq_lengths` comes from the scheduler (true per-sequence context
+    lengths; 0 for padded batch rows → the whole walk is skipped). Without
+    it the count is derived from the query positions — the causal mask
+    hides every page past `max(qpos)+1` anyway, so trimming them is exact.
+    """
+    if seq_lengths is None:
+        lens = jnp.max(q_positions, axis=1) + 1
+    else:
+        lens = seq_lengths
+    return jnp.clip(-(-lens // page_size), 0, n_cols).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Kernels
+# ---------------------------------------------------------------------------
+
+def _kernel(bt_ref, used_ref, *refs, g, dh, t, scale, bits, group, theta,
+            ncp, q_block, head_block, splits):
     quant = bits is not None
     if quant:
-        (q_ref, qpos_ref, k_ref, v_ref, ks_ref, kz_ref, vs_ref, vz_ref,
-         fr_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+        (q_ref, qpos_ref, k_any, v_any, ks_ref, kz_ref, vs_ref, vz_ref,
+         fr_ref, *rest) = refs
     else:
-        q_ref, qpos_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
-    p = pl.program_id(1)
+        q_ref, qpos_ref, k_any, v_any, *rest = refs
+    if splits == 1:
+        o_ref, m_ref, l_ref, acc_ref, k_buf, v_buf, sem = rest
+    else:
+        (mp_ref, lp_ref, ap_ref, m_ref, l_ref, acc_ref,
+         k_buf, v_buf, sem) = rest
+
+    b = pl.program_id(0)
+    hb = pl.program_id(1)
+    ks = pl.program_id(3)
+    p = pl.program_id(4)
+    col = ks * ncp + p
+    used = used_ref[b]
+    h0 = hb * head_block
+
+    def page_dma(slot, c):
+        """Async copies pool page `block_tables[b, c]`'s K/V head slice
+        into VMEM slot `slot` (two copies, one DMA semaphore each)."""
+        page = bt_ref[b, c]
+        return (
+            pltpu.make_async_copy(
+                k_any.at[page, :, pl.ds(h0, head_block), :],
+                k_buf.at[slot], sem.at[slot, 0]),
+            pltpu.make_async_copy(
+                v_any.at[page, :, pl.ds(h0, head_block), :],
+                v_buf.at[slot], sem.at[slot, 1]),
+        )
 
     @pl.when(p == 0)
     def _init():
@@ -138,46 +301,82 @@ def _kernel(bt_ref, *refs, s, kh, g, dh, t, scale, bits, group, theta):
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32).reshape(s, kh, g, dh)
-    qpos = qpos_ref[0]
-    kpos = p * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
-    if quant:
-        k = dequant_page(k_ref[0], ks_ref[0], kz_ref[0],
-                         bits=bits, group=group)
-        v = dequant_page(v_ref[0], vs_ref[0], vz_ref[0],
-                         bits=bits, group=group)
-        if theta is not None:
-            k = rope_page(k, kpos, fr_ref[...][0])
-    else:
-        k = k_ref[0].astype(jnp.float32)
-        v = v_ref[0].astype(jnp.float32)
+    # warm the pipe: fetch this split's first live column...
+    @pl.when(jnp.logical_and(p == 0, col < used))
+    def _first_fetch():
+        for dma in page_dma(0, col):
+            dma.start()
 
-    m, l, acc = page_update(m_ref[...], l_ref[...], acc_ref[...],
-                            q, k, v, qpos, kpos, scale)
-    m_ref[...] = m
-    l_ref[...] = l
-    acc_ref[...] = acc
+    # ...and issue the NEXT column's copy before the current update
+    # consumes its slot — the DMA overlaps the softmax update below.
+    @pl.when(jnp.logical_and(p + 1 < ncp, col + 1 < used))
+    def _prefetch_next():
+        for dma in page_dma((p + 1) % 2, col + 1):
+            dma.start()
 
-    @pl.when(p == pl.num_programs(1) - 1)
+    @pl.when(col < used)
+    def _update():
+        for dma in page_dma(p % 2, col):
+            dma.wait()
+        q = q_ref[0].astype(jnp.float32).reshape(
+            q_block, head_block, g, dh)
+        qpos = qpos_ref[0]
+        kpos = col * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
+        if quant:
+            k = dequant_page(k_buf[p % 2], ks_ref[0], kz_ref[0],
+                             bits=bits, group=group)
+            v = dequant_page(v_buf[p % 2], vs_ref[0], vz_ref[0],
+                             bits=bits, group=group)
+            if theta is not None:
+                k = rope_page(k, kpos, fr_ref[...][0])
+        else:
+            k = k_buf[p % 2].astype(jnp.float32)
+            v = v_buf[p % 2].astype(jnp.float32)
+        m, l, acc = page_update(m_ref[...], l_ref[...], acc_ref[...],
+                                q, k, v, qpos, kpos, scale)
+        m_ref[...] = m
+        l_ref[...] = l
+        acc_ref[...] = acc
+
+    @pl.when(p == ncp - 1)
     def _epilogue():
-        o_ref[0] = finalize(l_ref[...], acc_ref[...]).astype(o_ref.dtype)
+        hbg = head_block * g
+        if splits == 1:
+            o_ref[0] = finalize(l_ref[...], acc_ref[...]).astype(o_ref.dtype)
+        else:
+            mp_ref[0, 0] = m_ref[...].reshape(hbg, q_block)
+            lp_ref[0, 0] = l_ref[...].reshape(hbg, q_block)
+            ap_ref[0, 0] = acc_ref[...].reshape(hbg, q_block, dh)
 
 
-@functools.partial(jax.jit, static_argnames=("rope_theta", "kv_bits",
-                                             "kv_group", "interpret"))
+def _combine_kernel(mp_ref, lp_ref, ap_ref, o_ref):
+    o_ref[0] = combine_partials(mp_ref[0], lp_ref[0],
+                                ap_ref[0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "rope_theta", "kv_bits", "kv_group", "q_block", "kv_splits",
+    "head_block", "interpret"))
 def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
-                    q_positions: jnp.ndarray, *,
+                    q_positions: jnp.ndarray,
+                    seq_lengths: jnp.ndarray | None = None, *,
                     rope_theta: float | None = None,
                     kv_bits: int | None = None,
                     kv_group: int | None = None,
+                    q_block: int | None = None,
+                    kv_splits: int | None = None,
+                    head_block: int | None = None,
                     interpret: bool = True) -> jnp.ndarray:
     """Causal attention of `q` against one layer's KV page pool.
 
     q [B, S, H, Dh] (queries already rotated); kv {"k", "v"} pages
     [n_pages, T, KH, Dh] (+ "{k,v}_{scale,zero}" [n_pages, T, KH, Dh/g]
     when `kv_bits` is set); block_tables [B, P] int32 (pad = scratch);
-    q_positions [B, S] int32 absolute positions. `rope_theta` rotates the
-    dequantized K pages in-kernel (integer caches store K pre-RoPE).
+    q_positions [B, S] int32 absolute positions; seq_lengths [B] optional
+    true context lengths (pages past ceil(len/T) are skipped — 0 skips the
+    row's whole walk). `rope_theta` rotates the dequantized K pages
+    in-kernel (integer caches store K pre-RoPE). `q_block`/`kv_splits`/
+    `head_block` pick the grid tiling (`resolve_tiling` defaults).
     Returns [B, S, H, Dh] float32.
     """
     b, s, h, dh = q.shape
@@ -188,101 +387,254 @@ def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
     group = kv_group if quant else None
     if quant and dh % group:
         raise ValueError(f"head_dim {dh} not divisible by kv_group {group}")
+    q_block, kv_splits, head_block, ncp = resolve_tiling(
+        s, kh, n_cols, q_block, kv_splits, head_block)
+    n_hb, n_qb = kh // head_block, s // q_block
+    hbg = head_block * g
+
+    # partition the page axis into kv_splits × ncp-column walks; the grid
+    # needs equal widths, so the table is padded with scratch columns
+    # (past every used count — never walked)
+    pad_cols = kv_splits * ncp - n_cols
+    if pad_cols:
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad_cols)))
+    used = used_page_counts(q_positions, seq_lengths, t, n_cols)
 
     kern = functools.partial(
-        _kernel, s=s, kh=kh, g=g, dh=dh, t=t, scale=1.0 / math.sqrt(dh),
-        bits=kv_bits, group=group, theta=rope_theta if quant else None)
+        _kernel, g=g, dh=dh, t=t, scale=1.0 / math.sqrt(dh),
+        bits=kv_bits, group=group, theta=rope_theta if quant else None,
+        ncp=ncp, q_block=q_block, head_block=head_block, splits=kv_splits)
 
-    def page_spec(last):
-        return pl.BlockSpec((1, t, kh, last),
-                            lambda bb, pp, bt: (bt[bb, pp], 0, 0, 0))
+    def aux_page_spec(last):
+        return pl.BlockSpec(
+            (1, t, head_block, last),
+            lambda bb, hh, qq, ss, pp, bt, u:
+                (bt[bb, ss * ncp + pp], 0, hh, 0))
 
     in_specs = [
-        pl.BlockSpec((1, s, h, dh), lambda bb, pp, bt: (bb, 0, 0, 0)),
-        pl.BlockSpec((1, s), lambda bb, pp, bt: (bb, 0)),
-        page_spec(dh),
-        page_spec(dh),
+        pl.BlockSpec((1, q_block, hbg, dh),
+                     lambda bb, hh, qq, ss, pp, bt, u: (bb, qq, hh, 0)),
+        pl.BlockSpec((1, q_block),
+                     lambda bb, hh, qq, ss, pp, bt, u: (bb, qq)),
+        pl.BlockSpec(memory_space=pltpu.ANY),    # K pages: manual DMA
+        pl.BlockSpec(memory_space=pltpu.ANY),    # V pages: manual DMA
     ]
     operands = [q, q_positions.astype(jnp.int32), kv["k"], kv["v"]]
     if quant:
         ng = dh // group
-        in_specs += [page_spec(ng)] * 4
+        in_specs += [aux_page_spec(ng)] * 4
         operands += [kv["k_scale"], kv["k_zero"],
                      kv["v_scale"], kv["v_zero"]]
         in_specs.append(pl.BlockSpec((1, dh // 2),
-                                     lambda bb, pp, bt: (0, 0)))
+                                     lambda bb, hh, qq, ss, pp, bt, u:
+                                     (0, 0)))
         operands.append(rope_frequencies(dh, rope_theta or 1.0)[None]
                         if rope_theta is not None
                         else jnp.zeros((1, dh // 2), jnp.float32))
 
+    if kv_splits == 1:
+        out_shape = jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32)
+        out_specs = pl.BlockSpec(
+            (1, q_block, hbg, dh),
+            lambda bb, hh, qq, ss, pp, bt, u: (bb, qq, hh, 0))
+    else:
+        out_shape = (
+            jax.ShapeDtypeStruct((b, kv_splits, h, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv_splits, h, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv_splits, h, s, dh), jnp.float32),
+        )
+        ml_spec = pl.BlockSpec(
+            (1, 1, hbg, q_block),
+            lambda bb, hh, qq, ss, pp, bt, u: (bb, ss, hh, qq))
+        out_specs = (
+            ml_spec, ml_spec,
+            pl.BlockSpec((1, 1, hbg, q_block, dh),
+                         lambda bb, hh, qq, ss, pp, bt, u:
+                         (bb, ss, hh, qq, 0)),
+        )
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, n_cols),
+        num_scalar_prefetch=2,
+        grid=(b, n_hb, n_qb, kv_splits, ncp),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, s, h, dh),
-                               lambda bb, pp, bt: (bb, 0, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
-            pltpu.VMEM((kh, g, s), jnp.float32),
-            pltpu.VMEM((kh, g, s), jnp.float32),
-            pltpu.VMEM((kh, g, s, dh), jnp.float32),
+            pltpu.VMEM((head_block, g, q_block), jnp.float32),
+            pltpu.VMEM((head_block, g, q_block), jnp.float32),
+            pltpu.VMEM((head_block, g, q_block, dh), jnp.float32),
+            pltpu.VMEM((2, t, head_block, dh), kv["k"].dtype),
+            pltpu.VMEM((2, t, head_block, dh), kv["v"].dtype),
+            pltpu.SemaphoreType.DMA((2, 2)),
         ],
     )
-    return pl.pallas_call(
+    result = pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        out_shape=out_shape,
         grid_spec=grid_spec,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), *operands)
+    )(block_tables.astype(jnp.int32), used, *operands)
+    if kv_splits == 1:
+        return result
+
+    m_p, l_p, acc_p = result
+    ml_spec = pl.BlockSpec((1, kv_splits, hbg, q_block),
+                           lambda bb, hh, qq: (bb, 0, hh, qq))
+    return pl.pallas_call(
+        _combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, dh), jnp.float32),
+        grid=(b, n_hb, n_qb),
+        in_specs=[
+            ml_spec, ml_spec,
+            pl.BlockSpec((1, kv_splits, hbg, q_block, dh),
+                         lambda bb, hh, qq: (bb, 0, hh, qq, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hbg, dh),
+                               lambda bb, hh, qq: (bb, qq, hh, 0)),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(m_p, l_p, acc_p)
 
 
 # ---------------------------------------------------------------------------
 # jnp reference (re-exported as `kernels.ref.paged_attention_ref`)
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=(
+    "rope_theta", "kv_bits", "kv_group", "q_block", "kv_splits",
+    "head_block"))
 def paged_attention_reference(q: jnp.ndarray, kv: dict,
                               block_tables: jnp.ndarray,
-                              q_positions: jnp.ndarray, *,
+                              q_positions: jnp.ndarray,
+                              seq_lengths: jnp.ndarray | None = None, *,
                               rope_theta: float | None = None,
                               kv_bits: int | None = None,
-                              kv_group: int | None = None) -> jnp.ndarray:
-    """Plain-XLA mirror of the kernel: the identical page walk (same
-    helpers, same op order) as a `lax.scan` over table columns, vmapped
-    over sequences — bit-for-bit against the interpret-mode kernel."""
+                              kv_group: int | None = None,
+                              q_block: int | None = None,
+                              kv_splits: int | None = None,
+                              head_block: int | None = None) -> jnp.ndarray:
+    """Plain-XLA mirror of the kernel: the identical split/combine
+    reduction order — per-split column walks as `lax.scan`s with the same
+    used-page skip, the same LSE combine, same helpers, same op order —
+    replayed PER `(head_block, q_block)` TILE, vmapped over sequences.
+    Tiling the element-independent head/query axes cannot change the math,
+    but it does change the operand shapes XLA hands its dot kernels, and
+    different gemm strategies round the d-contraction a ulp apart; walking
+    each tile at exactly the kernel instance's shapes is what keeps the
+    contract bit-for-bit for every `(q_block, kv_splits, head_block)`.
+    jit'd like the kernel entry (an eagerly dispatched combine chain
+    rounds a ulp away from the compiled one).
+    """
     b, s, h, dh = q.shape
     t, kh = kv["k"].shape[1], kv["k"].shape[2]
     g = h // kh
+    n_cols = block_tables.shape[1]
     quant = kv_bits is not None
     scale = 1.0 / math.sqrt(dh)
+    q_block, kv_splits, head_block, ncp = resolve_tiling(
+        s, kh, n_cols, q_block, kv_splits, head_block)
+    pad_cols = kv_splits * ncp - n_cols
+    if pad_cols:
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad_cols)))
+    used = used_page_counts(q_positions, seq_lengths, t, n_cols)
     freqs = (rope_frequencies(dh, rope_theta)
              if quant and rope_theta is not None else None)
 
-    def one_sequence(qb, qposb, btb):
+    def one_sequence(qb, qposb, btb, used_b):
         qb = qb.astype(jnp.float32).reshape(s, kh, g, dh)
 
-        def step(carry, inp):
-            p, page = inp
-            kpos = p * t + jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)[0]
-            if quant:
-                k = dequant_page(kv["k"][page], kv["k_scale"][page],
-                                 kv["k_zero"][page],
-                                 bits=kv_bits, group=kv_group)
-                v = dequant_page(kv["v"][page], kv["v_scale"][page],
-                                 kv["v_zero"][page],
-                                 bits=kv_bits, group=kv_group)
-                if freqs is not None:
-                    k = rope_page(k, kpos, freqs)
-            else:
-                k = kv["k"][page].astype(jnp.float32)
-                v = kv["v"][page].astype(jnp.float32)
-            return page_update(*carry, qb, k, v, qposb, kpos, scale), None
+        def one_tile(q_tile, qpos_tile, h0):
+            # q_tile [q_block, head_block, g, dh] — one grid instance
 
-        m0 = jnp.full((kh, g, s), -jnp.inf, jnp.float32)
-        l0 = jnp.zeros((kh, g, s), jnp.float32)
-        a0 = jnp.zeros((kh, g, s, dh), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
-            step, (m0, l0, a0),
-            (jnp.arange(block_tables.shape[1], dtype=jnp.int32), btb))
-        return finalize(l, acc)
+            def step(carry, inp):
+                col, page = inp
+                kpos = col * t + jax.lax.broadcasted_iota(
+                    jnp.int32, (1, t), 1)[0]
+                hsl = slice(h0, h0 + head_block)
+                if quant:
+                    k = dequant_page(kv["k"][page][:, hsl],
+                                     kv["k_scale"][page][:, hsl],
+                                     kv["k_zero"][page][:, hsl],
+                                     bits=kv_bits, group=kv_group)
+                    v = dequant_page(kv["v"][page][:, hsl],
+                                     kv["v_scale"][page][:, hsl],
+                                     kv["v_zero"][page][:, hsl],
+                                     bits=kv_bits, group=kv_group)
+                    if freqs is not None:
+                        k = rope_page(k, kpos, freqs)
+                else:
+                    k = kv["k"][page][:, hsl].astype(jnp.float32)
+                    v = kv["v"][page][:, hsl].astype(jnp.float32)
+                new = page_update(*carry, q_tile, k, v, qpos_tile, kpos,
+                                  scale)
+                # the kernel skips dead columns outright; selecting the
+                # old carry replays that skip exactly
+                keep = col < used_b
+                carry = jax.tree.map(
+                    lambda n, o: jnp.where(keep, n, o), new, carry)
+                return carry, None
 
-    return jax.vmap(one_sequence)(q, q_positions.astype(jnp.int32),
-                                  block_tables)
+            def split_walk(split):
+                cols = jnp.arange(split * ncp, (split + 1) * ncp,
+                                  dtype=jnp.int32)
+                init = (jnp.full((head_block, g, q_block), -jnp.inf,
+                                 jnp.float32),
+                        jnp.zeros((head_block, g, q_block), jnp.float32),
+                        jnp.zeros((head_block, g, q_block, dh),
+                                  jnp.float32))
+                (m, l, acc), _ = jax.lax.scan(
+                    step, init,
+                    (cols, jax.lax.dynamic_slice_in_dim(btb, split * ncp,
+                                                        ncp)))
+                return m, l, acc
+
+            hbg = head_block * g
+            if kv_splits == 1:
+                m, l, acc = split_walk(0)
+                return finalize(l, acc)               # [q_block, hbg, dh]
+            parts = [split_walk(i) for i in range(kv_splits)]
+            m_p = jnp.stack([m.reshape(hbg, q_block) for m, _, _ in parts])
+            l_p = jnp.stack([l.reshape(hbg, q_block) for _, l, _ in parts])
+            acc_p = jnp.stack([a.reshape(hbg, q_block, dh)
+                               for _, _, a in parts])
+            return m_p, l_p, acc_p
+
+        tiles = [[one_tile(qb[qi * q_block:(qi + 1) * q_block,
+                              hb * head_block:(hb + 1) * head_block],
+                           qposb[qi * q_block:(qi + 1) * q_block],
+                           hb * head_block)
+                  for hb in range(kh // head_block)]
+                 for qi in range(s // q_block)]
+        if kv_splits == 1:
+            return jnp.concatenate(
+                [jnp.concatenate(row, axis=1) for row in tiles], axis=0)
+        # per-tile partial stacks [n_q_tiles, n_h_tiles, 3, KS, hbg, ...]
+        return jax.tree.map(lambda *xs: jnp.stack(xs).reshape(
+            s // q_block, kh // head_block, *xs[0].shape),
+            *[t for row in tiles for t in row])
+
+    out = jax.vmap(one_sequence)(q, q_positions.astype(jnp.int32),
+                                 block_tables, used)
+    if kv_splits == 1:
+        return out
+
+    # The combine runs OUTSIDE the vmapped walk, per (sequence, tile),
+    # behind an optimization barrier: the kernel path's partials are
+    # materialized pallas outputs (a hard fusion boundary), and without
+    # the same boundary here XLA fuses the combine's multiply-adds into
+    # the walk's producers as FMAs — a ulp apart from the kernel's
+    # combine. Same shapes + same isolation ⇒ same lowering, bit for bit.
+    m_p, l_p, acc_p = (jax.lax.optimization_barrier(x) for x in out)
+    rows = []
+    for bi in range(b):
+        qrows = []
+        for qi in range(s // q_block):
+            tiles = [combine_partials(m_p[bi, qi, hb], l_p[bi, qi, hb],
+                                      acc_p[bi, qi, hb])
+                     for hb in range(kh // head_block)]
+            qrows.append(jnp.concatenate(tiles, axis=1))
+        rows.append(jnp.concatenate(qrows, axis=0))
+    return jnp.stack(rows)

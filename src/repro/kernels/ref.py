@@ -25,9 +25,12 @@ __all__ = [
     "paged_attention_ref",
 ]
 
-# `paged_attention_ref` mirrors the Pallas page walk bit-for-bit (shared
-# per-page helpers, same op order); the *independent* oracle for it is
-# gather-to-slab + plain-softmax attention, asserted in the tests.
+# `paged_attention_ref` mirrors the flash-decoding Pallas kernel
+# bit-for-bit: the identical split/combine reduction order, the same
+# used-page skip, per-(head_block, q_block)-tile walks at the kernel
+# instance's exact operand shapes (shared per-page helpers, same op
+# order). The *independent* oracle for it is gather-to-slab +
+# plain-softmax attention, asserted in the tests.
 
 
 def block_hadamard_ref(x: jnp.ndarray, b: int) -> jnp.ndarray:

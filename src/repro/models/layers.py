@@ -52,6 +52,20 @@ def apply_norm(x, p: Params, kind: str):
 # ---------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """RoPE inverse frequencies — the model-side twin of
+    `kernels.paged_attention.rope_frequencies`.
+
+    The two CANNOT be one function: the kernel needs a host-side numpy
+    literal (a trace-invariant constant, or its operand and the
+    reference's embedded constant would round `pow` differently and break
+    the kernel-vs-reference bit-for-bit contract), while the model's
+    traced computation constant-folds through XLA, whose `pow` rounds up
+    to 2 ulp away from numpy's. Swapping the model onto the numpy literal
+    shifts every rotation by those ulps — enough to flip activation-quant
+    rounding ties downstream. `tests/test_kernels.py::
+    test_rope_frequency_literals_agree` pins the twins together (≤ 2 ulp
+    elementwise over the config sweep) so they cannot silently drift.
+    """
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
                             / head_dim))
 
@@ -200,6 +214,7 @@ def attention(x: jnp.ndarray, p: Params, spec: AttnSpec, *,
               cache: Params | None = None,
               cache_index: jnp.ndarray | None = None,
               block_table: jnp.ndarray | None = None,
+              seq_lengths: jnp.ndarray | None = None,
               act_in=None):
     """GQA attention. Returns (out, new_cache).
 
@@ -209,8 +224,12 @@ def attention(x: jnp.ndarray, p: Params, spec: AttnSpec, *,
     [n_pages, page_size, KH, Dh] — and attention is block-table-native:
     the new rows are scattered straight into their pages and the kernel
     walks the table (`kernels.ops.paged_attention`), no gathered slab.
-    `act_in(x, tag)` is the PTQ hook applied to every projection input
-    (quantize or capture).
+    `seq_lengths` [B] (paged path only) are the true per-sequence context
+    lengths the scheduler dispatches — the kernel's ragged early-exit
+    skips every page column past ceil(len/page_size); without them the
+    kernel derives the bound from the query positions. `act_in(x, tag)`
+    is the PTQ hook applied to every projection input (quantize or
+    capture).
     """
     b, s, d = x.shape
     h, kv, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
@@ -251,8 +270,8 @@ def attention(x: jnp.ndarray, p: Params, spec: AttnSpec, *,
             "k": paged_write_rows(cache["k"], k, block_table, positions),
             "v": paged_write_rows(cache["v"], v, block_table, positions),
         }
-        out = kops.paged_attention(q, new_cache, block_table,
-                                   positions).astype(x.dtype)
+        out = kops.paged_attention(q, new_cache, block_table, positions,
+                                   seq_lengths).astype(x.dtype)
     elif cache is not None:
         if per_slot:
             if s != 1:

@@ -133,7 +133,7 @@ class Model:
     # ------------------------------------------------------------------
 
     def _apply_block(self, x, blk: Params, cache, cache_index, *,
-                     positions=None, block_table=None):
+                     positions=None, block_table=None, seq_lengths=None):
         cfg = self.cfg
         hooks = self.quant_hooks
         new_cache = None
@@ -151,6 +151,7 @@ class Model:
                                     positions=positions, cache=cache,
                                     cache_index=cache_index,
                                     block_table=block_table,
+                                    seq_lengths=seq_lengths,
                                     act_in=hooks.get("act_in"))
         x = x + h
         h = L.apply_norm(x, blk["ffn_norm"], cfg.norm)
@@ -229,13 +230,14 @@ class Model:
         return shard_act(x, ("batch", "seq", "embed"))
 
     def _run_layers(self, params, x, *, caches=None, cache_index=None,
-                    block_table=None, remat: bool = False):
+                    block_table=None, seq_lengths=None, remat: bool = False):
         cfg = self.cfg
 
         def body(carry, inp):
             blk, cache = inp
             y, new_cache = self._apply_block(carry, blk, cache, cache_index,
-                                             block_table=block_table)
+                                             block_table=block_table,
+                                             seq_lengths=seq_lengths)
             return y, new_cache
 
         if remat:
@@ -375,7 +377,8 @@ class Model:
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
                       caches: Params, index: jnp.ndarray,
-                      block_table: jnp.ndarray | None = None):
+                      block_table: jnp.ndarray | None = None,
+                      seq_lengths: jnp.ndarray | None = None):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated caches.
 
@@ -386,13 +389,16 @@ class Model:
         `block_table` [B, P], `caches` is the engine's page pool (leaves
         [n_layers, n_pages, page_size, ...]) and attention runs
         block-table-native — new rows are written straight into their
-        pages and the paged-attention kernel walks the table.
+        pages and the paged-attention kernel walks the table;
+        `seq_lengths` [B] (the true per-sequence context lengths, 0 for
+        padded batch rows) feed the kernel's ragged early-exit.
         """
         x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
         x = shard_act(x, ("batch", "seq", "embed"))
         x, new_caches = self._run_layers(params, x, caches=caches,
                                          cache_index=index,
-                                         block_table=block_table)
+                                         block_table=block_table,
+                                         seq_lengths=seq_lengths)
         x = L.apply_norm(x, params["final_norm"], self.cfg.norm)
         logits = x @ params["lm_head"].astype(self.cdt)
         return logits, new_caches

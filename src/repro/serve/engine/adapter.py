@@ -49,13 +49,15 @@ class ServableModel(Protocol):
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
                       cache: Params, index: jnp.ndarray,
-                      block_table: jnp.ndarray | None = None):
+                      block_table: jnp.ndarray | None = None,
+                      seq_lengths: jnp.ndarray | None = None):
         """[B, S] tokens at fill position(s) `index` → ([B, S, V] logits,
         updated cache). With `block_table` [B, P] the cache is the page
-        pool and the forward is block-table-native. `params` is passed
-        explicitly (usually `adapter.params`) so the engine's fused jits
-        trace the weights as arguments, not as per-executable
-        constants."""
+        pool and the forward is block-table-native; `seq_lengths` [B]
+        (true context lengths, 0 for padded rows) drive the paged
+        kernel's ragged early-exit. `params` is passed explicitly
+        (usually `adapter.params`) so the engine's fused jits trace the
+        weights as arguments, not as per-executable constants."""
         ...
 
 
@@ -87,9 +89,11 @@ class DenseModelAdapter(_AdapterBase):
     def init_cache(self, batch: int, max_len: int) -> Params:
         return self.model.init_cache(batch, max_len, dtype=self.cache_dtype)
 
-    def forward_chunk(self, params, tokens, cache, index, block_table=None):
+    def forward_chunk(self, params, tokens, cache, index, block_table=None,
+                      seq_lengths=None):
         return self._forward(params, tokens, cache,
-                             jnp.asarray(index, jnp.int32), block_table)
+                             jnp.asarray(index, jnp.int32), block_table,
+                             seq_lengths)
 
 
 class IntegerModelAdapter(_AdapterBase):
@@ -103,10 +107,11 @@ class IntegerModelAdapter(_AdapterBase):
     def init_cache(self, batch: int, max_len: int) -> Params:
         return self.qlm.init_cache(batch, max_len)
 
-    def forward_chunk(self, params, tokens, cache, index, block_table=None):
+    def forward_chunk(self, params, tokens, cache, index, block_table=None,
+                      seq_lengths=None):
         # QuantizedDenseLM jits internally (per kernels-enabled state)
         return self.qlm.forward_chunk(params, tokens, cache, index,
-                                      block_table)
+                                      block_table, seq_lengths)
 
 
 def as_servable(model, params: Params, **kw) -> ServableModel:

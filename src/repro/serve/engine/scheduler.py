@@ -140,6 +140,13 @@ class ServeEngine:
         self.n_steps = 0
         self.n_prefill_tokens = 0
         self.n_decode_tokens = 0
+        # page-walk accounting (per attention dispatch, per batch row):
+        # `pages_walked` counts what the ragged early-exit actually walks
+        # (ceil(len/page_size) live columns per sequence); `pages_walked_
+        # dense` counts what the pre-flash-decode kernel walked (every
+        # padded batch row × every table column)
+        self.pages_walked = 0
+        self.pages_walked_dense = 0
 
     # ------------------------------------------------------------------
     # bookkeeping
@@ -230,12 +237,15 @@ class ServeEngine:
         return any(r.sampling.top_k > 0 or r.sampling.top_p < 1.0
                    for r in batch)
 
-    def _decode_impl(self, pool, params, key, bt, tokens, fill, temps,
+    def _decode_impl(self, pool, params, key, bt, tokens, fill, lens, temps,
                      top_ks, top_ps, *, filtered):
         # block-table-native: the forward writes each new KV row into its
-        # page and attends by walking `bt` — no gathered slab exists
+        # page and attends by walking `bt` — no gathered slab exists.
+        # `lens` are the true per-slot context lengths (0 for padded
+        # rows): the kernel's ragged early-exit walks only each
+        # sequence's live pages instead of every table column.
         logits, pool = self.adapter.forward_chunk(params, tokens, pool,
-                                                  fill, bt)
+                                                  fill, bt, lens)
         key, sub = jax.random.split(key)
         lg = logits[:, 0].astype(jnp.float32)
         return pool, key, lg, _sample_tokens(sub, lg, temps, top_ks, top_ps,
@@ -255,6 +265,11 @@ class ServeEngine:
             jnp.int32)
         fill = jnp.asarray([r.n_cached for r in batch]
                            + [0] * (b - len(batch)), jnp.int32)
+        new_lens = [r.n_cached + 1 for r in batch]
+        lens = jnp.asarray(new_lens + [0] * (b - len(batch)), jnp.int32)
+        self.pages_walked += sum(pages_for(n, self.kv.page_size)
+                                 for n in new_lens)
+        self.pages_walked_dense += b * n_cols
 
         temps = jnp.asarray([r.sampling.temperature for r in batch]
                             + [0.0] * (b - len(batch)), jnp.float32)
@@ -268,7 +283,7 @@ class ServeEngine:
             functools.partial(self._decode_impl, filtered=filtered),
             variant=filtered)(
             self.kv.pool, self.adapter.params, self._key, bt, tokens, fill,
-            temps, top_ks, top_ps)
+            lens, temps, top_ks, top_ps)
         toks = np.asarray(toks)
         finished = []
         for i, req in enumerate(list(batch)):
@@ -290,14 +305,18 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _prefill_impl(self, pool, params, key, bt, tokens, start, last,
-                      temp, top_k, top_p, *, filtered):
+                      lens, temp, top_k, top_p, *, filtered):
         # padded tail rows are computed too (their queries may attend the
         # garbage keys the same forward wrote for earlier padding tokens,
         # so their outputs are meaningless and discarded); their in-page
         # writes land on the scratch page or on not-yet-valid slots that
-        # are rewritten before the causal mask ever exposes them
+        # are rewritten before the causal mask ever exposes them. `lens`
+        # is the true cached length after this chunk (start + real): the
+        # kernel's early-exit trims the walk to the live pages, which
+        # also stops the padded tail queries from touching columns past
+        # them (their outputs are discarded either way).
         logits, pool = self.adapter.forward_chunk(params, tokens, pool,
-                                                  start, bt)
+                                                  start, bt, lens)
         key, sub = jax.random.split(key)
         lg = jax.lax.dynamic_index_in_dim(logits, last, axis=1,
                                           keepdims=False)[0]
@@ -320,6 +339,8 @@ class ServeEngine:
         # powers of two, so prefill compiles a bounded set of variants;
         # `last` (= real - 1) rides along as a traced scalar
         chunk = req.prompt[start:start + real] + [0] * (padded - real)
+        self.pages_walked += pages_for(start + real, self.kv.page_size)
+        self.pages_walked_dense += n_cols
         filtered = self._wants_filtering([req])
         self.kv.pool, self._key, last, tok = self._fused(
             "prefill",
@@ -328,6 +349,7 @@ class ServeEngine:
             self.kv.pool, self.adapter.params, self._key, bt,
             jnp.asarray([chunk], jnp.int32), jnp.asarray(start, jnp.int32),
             jnp.asarray(real - 1, jnp.int32),
+            jnp.asarray([start + real], jnp.int32),
             jnp.asarray([req.sampling.temperature], jnp.float32),
             jnp.asarray([req.sampling.top_k], jnp.int32),
             jnp.asarray([req.sampling.top_p], jnp.float32))

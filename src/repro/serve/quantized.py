@@ -229,7 +229,8 @@ class QuantizedDenseLM:
         return dq(cache["k"], cache["k_scale"], cache["k_zero"]), \
             dq(cache["v"], cache["v_scale"], cache["v_zero"])
 
-    def _block(self, x, blk, cache, index, block_table=None):
+    def _block(self, x, blk, cache, index, block_table=None,
+               seq_lengths=None):
         cfg = self.cfg
         spec = self.attn_spec
         b, s, d = x.shape
@@ -263,7 +264,7 @@ class QuantizedDenseLM:
             # rotation for the integer page formats)
             new_cache = self._paged_cache_write(cache, k, v, pos, block_table)
             attn = kops.paged_attention(
-                q, new_cache, block_table, pos,
+                q, new_cache, block_table, pos, seq_lengths,
                 rope_theta=spec.rope_theta if self.kv_bits is not None
                 else None,
                 kv_bits=self.kv_bits,
@@ -303,7 +304,7 @@ class QuantizedDenseLM:
         return x, new_cache
 
     def _forward(self, params: Params, tokens: jnp.ndarray, cache: Params,
-                 index: jnp.ndarray, block_table=None):
+                 index: jnp.ndarray, block_table=None, seq_lengths=None):
         cfg = self.cfg
         cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
         x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
@@ -311,7 +312,8 @@ class QuantizedDenseLM:
 
         def body(carry, inp):
             blk, c = inp
-            return self._block(carry, blk, c, index, block_table)
+            return self._block(carry, blk, c, index, block_table,
+                               seq_lengths)
 
         x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
         x = L.apply_norm(x, params["final_norm"], cfg.norm)
@@ -327,26 +329,30 @@ class QuantizedDenseLM:
         if fn is None:
             enabled = key[1]
 
-            def wrapped(params, tokens, cache, index, block_table=None):
+            def wrapped(params, tokens, cache, index, block_table=None,
+                        seq_lengths=None):
                 with kops.use_kernels(enabled):
-                    return impl(params, tokens, cache, index, block_table)
+                    return impl(params, tokens, cache, index, block_table,
+                                seq_lengths)
 
             fn = self._jit_cache[key] = jax.jit(wrapped)
         return fn
 
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
                       cache: Params, index: jnp.ndarray,
-                      block_table: jnp.ndarray | None = None):
+                      block_table: jnp.ndarray | None = None,
+                      seq_lengths: jnp.ndarray | None = None):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated cache. S == 1 with a [B] vector index
         is a per-slot continuous-batching decode step; S > 1 with a
         scalar index is one chunk of a chunked prefill (causal within
         the chunk, attending to everything already cached). With
         `block_table` [B, P] the cache is the engine's page pool and
-        attention runs block-table-native."""
+        attention runs block-table-native; `seq_lengths` [B] feed the
+        paged kernel's ragged early-exit."""
         return self._jitted("forward", self._forward)(
             params, tokens, cache, jnp.asarray(index, jnp.int32),
-            block_table)
+            block_table, seq_lengths)
 
     def decode_step(self, params: Params, tokens: jnp.ndarray,
                     cache: Params, index: jnp.ndarray):

@@ -159,6 +159,16 @@ def test_page_accounting_no_leaks(stack):
     assert all(len(done[i].generated) == 3 for i in range(len(prompts)))
 
 
+def test_walked_pages_accounting(stack):
+    """The scheduler's walked-pages counters must show the ragged
+    early-exit doing strictly less work than the padded-batch ×
+    full-table walk of the pre-flash-decode kernel (the benchmarks
+    report exactly these counters)."""
+    adapter = _adapter(stack, "bf16")
+    eng, _ = _engine_run(adapter, PROMPTS)
+    assert 0 < eng.pages_walked < eng.pages_walked_dense
+
+
 def test_integer_kv_pages_round_trip(stack):
     """Integer KV pages carry codes + scale/zero: after a run the pool
     leaves keep the int8 code dtype and the engine still frees cleanly."""

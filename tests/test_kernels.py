@@ -118,6 +118,53 @@ def test_int4_matmul_equals_float_path():
                                atol=1e-4)
 
 
+@pytest.mark.parametrize("m,k,n", [
+    (4, 64, 502),    # N = 2·251: largest divisor ≤ 128 is 2 → pad to 512
+    (4, 502, 64),    # K = 2·251: only even divisor ≤ 256 is 2 → pad
+    (3, 502, 502),   # both awkward at once, M not a tile multiple either
+])
+def test_int4_matmul_awkward_dims_pad_and_slice(m, k, n):
+    """Non-power-of-two projection widths whose only small divisors are
+    tiny must not hard-fail (or crawl on 2-wide tiles): the kernel pads
+    the awkward dim to the preferred tile with zeros — an exact no-op for
+    every real output element — and slices the pad off."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    act_codes = jax.random.randint(k1, (m, k), 0, 16, dtype=jnp.int8)
+    act_scale = jax.random.uniform(k2, (m, 1), minval=0.01, maxval=0.2)
+    act_zero = jnp.round(jax.random.uniform(k3, (m, 1), minval=-8, maxval=0))
+    w_codes = jax.random.randint(k2, (k, n), -8, 8, dtype=jnp.int8)
+    w_packed = kref.int4_pack(w_codes)
+    w_scale = jax.random.uniform(k1, (n,), minval=0.01, maxval=0.1)
+    got = int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
+                      interpret=True)
+    want = kref.int4_matmul_ref(act_codes, act_scale, act_zero, w_packed,
+                                w_scale)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rope_frequency_literals_agree():
+    """`models.layers.rope_frequencies` (traced jnp — the model's
+    historical arithmetic) and `kernels.paged_attention.rope_frequencies`
+    (host-side numpy — the kernel's trace-invariant literal) are twins on
+    purpose: they cannot be one function because XLA's `pow` rounds up to
+    2 ulp away from numpy's, and each side needs its own rounding (the
+    kernel for its bit-for-bit dispatch-vs-reference contract, the model
+    because moving it onto the numpy literal shifts rotations enough to
+    flip activation-quant ties). This pin keeps the twins from silently
+    drifting apart: any formula change shows up as a >2-ulp gap."""
+    from repro.kernels.paged_attention import rope_frequencies as kern_freqs
+    from repro.models.layers import rope_frequencies as model_freqs
+
+    for head_dim in (32, 64, 128):
+        for theta in (10_000.0, 500_000.0, 1_000_000.0):
+            a = np.asarray(kern_freqs(head_dim, theta), np.float32)
+            b = np.asarray(model_freqs(head_dim, theta), np.float32)
+            assert a.shape == b.shape == (head_dim // 2,)
+            ulp = np.abs(a.view(np.int32) - b.view(np.int32))
+            assert ulp.max() <= 2, (head_dim, theta, ulp.max())
+
+
 def test_ops_dispatch_reference_mode():
     from repro.kernels import ops
     x = jax.random.normal(KEY, (4, 128))
