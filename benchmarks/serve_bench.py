@@ -3,11 +3,17 @@
 Drives the same request trace through (a) the legacy dense-slot
 `BatchScheduler` (one token per sequence per step, prompts dripped
 token-by-token), (b) the paged-KV engine on the bf16 path, and (c) the
-paged engine on the packed-int4 path with bf16 and int8 KV pages. Reports
-end-to-end generated tokens/sec and p50/p95 per-token latency (each
-generated token inherits the wall time of the engine step that produced
-it), and appends the rows to `artifacts/BENCH_serve.json` so the serving
-perf trajectory is tracked across PRs.
+paged engine on the packed-int4 path with bf16 and int8 KV pages. A
+second set of engine rows covers the non-dense registry families the
+generalized state model serves — pure SSM (mamba2, register slots only),
+hybrid (zamba2, kv pages + register slots), and MoE (deepseek, kv pages +
+routed FFN) — so the per-family serving trajectory is tracked alongside
+dense. Reports end-to-end generated tokens/sec and p50/p95 per-token
+latency (each generated token inherits the wall time of the engine step
+that produced it), and appends the rows to `artifacts/BENCH_serve.json`;
+every scheduler row carries a `family` tag and the writer schema-checks
+rows before writing, so a partial row fails the smoke job instead of
+silently landing in the history.
 
 Every path is warmed up on the same scheduler/engine object first, so the
 numbers measure steady-state scheduling + forward cost, not jit tracing.
@@ -202,6 +208,7 @@ def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
         wall = time.perf_counter() - t0
         rows.append({
             "path": name,
+            "family": "dense",
             "tokens_per_s": round(slots * iters / wall, 2),
             "gathered_bytes_per_step": gathered,
             "pages_walked_per_step": walked[name],
@@ -210,6 +217,18 @@ def bench_attn_data_path(cfg, *, page_size, slots, seq_len, iters):
             "wall_s": round(wall, 4),
         })
     return rows
+
+
+def _check_schema(rows):
+    """Every row must carry `family` and `tokens_per_s` — a partial row
+    (a bench path that crashed mid-collection or forgot its tag) fails the
+    smoke job instead of silently writing incomplete JSON history."""
+    for row in rows:
+        missing = [k for k in ("family", "tokens_per_s") if k not in row]
+        if missing:
+            raise ValueError(
+                f"bench row {row.get('path', '?')!r} is missing required "
+                f"field(s) {missing}; refusing to write partial history")
 
 
 def main(argv=None):
@@ -241,28 +260,43 @@ def main(argv=None):
     prompts = _trace(n_req, cfg.vocab, lo=lo, hi=hi)
     total = sum(len(p) for p in prompts) + n_req * max_new
 
+    # per-family engine rows: the generalized state model serves the
+    # non-dense registry families through the same scheduler. Family
+    # traces stay smoke-sized in both modes (the point is the per-family
+    # trajectory, not a long trace)
+    def family_run(arch, **model_kw):
+        fcfg = get_config(arch).reduced()
+        fmodel = build_model(fcfg, **model_kw)
+        fparams = fmodel.init(jax.random.PRNGKey(0))
+        fprompts = _trace(3, fcfg.vocab, lo=3, hi=12)
+        return lambda: bench_engine(as_servable(fmodel, fparams), fprompts,
+                                    3, slots, max_len, page, chunk)
+
     runs = {
-        "legacy_sched_bf16":
+        "legacy_sched_bf16": ("dense",
             lambda: bench_legacy(model, params, prompts, max_new, slots,
-                                 max_len),
-        "engine_bf16":
+                                 max_len)),
+        "engine_bf16": ("dense",
             lambda: bench_engine(as_servable(model, params), prompts,
-                                 max_new, slots, max_len, page, chunk),
-        "engine_int4_kvbf16":
+                                 max_new, slots, max_len, page, chunk)),
+        "engine_int4_kvbf16": ("dense",
             lambda: bench_engine(
                 as_servable(QuantizedDenseLM(cfg, block_size=16), packed),
-                prompts, max_new, slots, max_len, page, chunk),
-        "engine_int4_kv8":
+                prompts, max_new, slots, max_len, page, chunk)),
+        "engine_int4_kv8": ("dense",
             lambda: bench_engine(
                 as_servable(QuantizedDenseLM(cfg, block_size=16, kv_bits=8),
                             packed),
-                prompts, max_new, slots, max_len, page, chunk),
+                prompts, max_new, slots, max_len, page, chunk)),
+        "engine_bf16_ssm": ("ssm", family_run("mamba2-1.3b")),
+        "engine_bf16_hybrid": ("hybrid", family_run("zamba2-1.2b")),
+        "engine_bf16_moe": ("moe", family_run("deepseek-moe-16b")),
     }
 
     rows = []
-    print("path,tokens_per_s,p50_ms,p95_ms,gen_tokens,steps,wall_s,"
+    print("path,family,tokens_per_s,p50_ms,p95_ms,gen_tokens,steps,wall_s,"
           "pages_walked_per_step,pages_dense_per_step")
-    for name, fn in runs.items():
+    for name, (family, fn) in runs.items():
         wall, lat, steps, pages = fn()
         gen = len(lat)
         # `steps` = scheduler iterations (≈ batched forward passes): the
@@ -271,6 +305,7 @@ def main(argv=None):
         # where CPU dispatch overhead hides it in wall time
         row = {
             "path": name,
+            "family": family,
             "tokens_per_s": round(gen / wall, 2),
             "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
@@ -288,8 +323,8 @@ def main(argv=None):
                 pages["pages_walked_dense"] / max(steps, 1), 2)
         rows.append(row)
         print(",".join(str(row.get(k, "")) for k in (
-            "path", "tokens_per_s", "p50_ms", "p95_ms", "gen_tokens",
-            "steps", "wall_s", "pages_walked_per_step",
+            "path", "family", "tokens_per_s", "p50_ms", "p95_ms",
+            "gen_tokens", "steps", "wall_s", "pages_walked_per_step",
             "pages_dense_per_step")))
 
     # attention data path in isolation: the slab round trip vs the
@@ -310,6 +345,7 @@ def main(argv=None):
                    "trace_tokens": total},
         "rows": rows,
     }
+    _check_schema(rows)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     history = []
     if os.path.exists(args.out):

@@ -4,11 +4,15 @@ continuous-batching engine.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \\
         --reduced --preset perq_star --block-size 16 --requests 8
 
-Every path runs batched through `repro.serve.engine.ServeEngine` (paged KV
-pool, chunked prefill, per-step admission): the bf16 model (`--no-quant`),
-the fake-quant PTQ output (default), and the packed-int4 integer engine
-(`--integer-path`, dense archs, optional `--kv-bits {4,8}` integer KV
-pages). `--legacy-scheduler` keeps the old dense-slot `BatchScheduler` for
+Every path runs batched through `repro.serve.engine.ServeEngine` (paged
+state pools, chunked prefill, per-step admission): the bf16 model
+(`--no-quant`), the fake-quant PTQ output (default), and the packed-int4
+integer engine (`--integer-path`, dense archs, optional `--kv-bits {4,8}`
+integer KV pages). The engine serves every decode-capable token-LM family
+in the registry — dense, MoE, pure-SSM, hybrid — through the same
+scheduler (`--model mamba2-1.3b --reduced --no-quant` serves the Mamba2
+smoke config); encoder/frontend archs are rejected with a capability
+error. `--legacy-scheduler` keeps the old dense-slot `BatchScheduler` for
 comparison (bf16/fake-quant only).
 """
 import argparse
@@ -28,7 +32,8 @@ from repro.serve.step import BatchScheduler, Request
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_IDS)
+    ap.add_argument("--arch", "--model", dest="arch",
+                    default="qwen1.5-0.5b", choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--preset", default="perq_star",
                     choices=sorted(PL.PRESETS))
@@ -96,6 +101,9 @@ def main(argv=None):
         return
 
     if args.integer_path:
+        if cfg.family not in ("dense", "vlm"):
+            raise SystemExit(f"--integer-path packs dense projections only; "
+                             f"{cfg.name} is family {cfg.family!r}")
         from repro.serve.quantized import QuantizedDenseLM, \
             pack_dense_params
         qlm = QuantizedDenseLM(cfg, block_size=args.block_size,

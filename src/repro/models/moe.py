@@ -147,21 +147,39 @@ def moe_ffn(x: jnp.ndarray, p: Params, *, n_experts: int, top_k: int,
 
 
 def moe_ffn_dense_oracle(x: jnp.ndarray, p: Params, *, n_experts: int,
-                         top_k: int, act: str) -> jnp.ndarray:
+                         top_k: int, act: str,
+                         down_proj_fn=None, act_in=None,
+                         shared_down_proj_fn=None) -> jnp.ndarray:
     """Reference: evaluate EVERY expert for every token, mix by top-k gates
-    (no capacity drops). O(E·FFN) — tests only."""
+    (no capacity drops). O(E·FFN), but per-token exact and therefore
+    chunking-invariant — the parity oracle for serving tests (capacity
+    drops in `moe_ffn` depend on the chunk length, so chunked prefill and
+    a whole-prompt pass route differently there). Takes the same PTQ hooks
+    as `moe_ffn` (the routed down-proj einsum is shape-generic over the
+    capacity vs sequence axis)."""
+    if act_in is not None:
+        x = act_in(x, "ffn")
     b, s, d = x.shape
     gates, idx = _route(x, p["router"], top_k)
+    xe = x[:, None].repeat(n_experts, 1)                     # [B,E,S,d]
+    if act_in is not None:
+        xe = act_in(xe, "expert_in")
     if act == "silu":
-        h = jax.nn.silu(jnp.einsum("bsd,edf->besf", x, p["w_gate"])) \
-            * jnp.einsum("bsd,edf->besf", x, p["w_up"])
+        h = jax.nn.silu(jnp.einsum("besd,edf->besf", xe, p["w_gate"])) \
+            * jnp.einsum("besd,edf->besf", xe, p["w_up"])
     else:
-        h = jax.nn.gelu(jnp.einsum("bsd,edf->besf", x, p["w_up"]))
-    allout = jnp.einsum("besf,efd->besd", h, p["w_down"])    # [B,E,S,d]
+        h = jax.nn.gelu(jnp.einsum("besd,edf->besf", xe, p["w_up"]))
+    if down_proj_fn is not None:
+        allout = down_proj_fn(h, p["w_down"])                # [B,E,S,d]
+    else:
+        allout = jnp.einsum("besf,efd->besd", h, p["w_down"])
     onehot = jax.nn.one_hot(idx, n_experts, dtype=x.dtype)   # [B,S,k,E]
     mix = jnp.einsum("bske,bsk->bse", onehot, gates.astype(x.dtype))
     out = jnp.einsum("bse,besd->bsd", mix, allout)
     if "shared_gate" in p:
         sh = jax.nn.silu(x @ p["shared_gate"]) * (x @ p["shared_up"])
-        out = out + sh @ p["shared_down"]
+        if shared_down_proj_fn is not None:
+            out = out + shared_down_proj_fn(sh, p["shared_down"])
+        else:
+            out = out + sh @ p["shared_down"]
     return out

@@ -48,11 +48,15 @@ def init_ssm(key, d_model: int, *, expand: int, head_dim: int, state: int,
 
 
 def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
-                 init_state: jnp.ndarray | None = None):
+                 init_state: jnp.ndarray | None = None,
+                 valid_len: jnp.ndarray | None = None):
     """Depthwise causal conv over the sequence axis.
 
     x: [B, S, C]; w: [W, C]. Returns (out [B, S, C], tail [B, W-1, C]) where
-    `tail` is the conv state to carry into decode.
+    `tail` is the conv state to carry into decode. When `valid_len` [B] is
+    given (chunked serving prefill with right-padded rows), the tail is
+    taken at each row's true end instead of the padded end, so carried
+    state matches an unpadded run exactly.
     """
     width = w.shape[0]
     if init_state is None:
@@ -63,7 +67,15 @@ def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
     out = jnp.zeros_like(x)
     for i in range(width):
         out = out + xp[:, i:i + x.shape[1]] * w[i]
-    tail = xp[:, -(width - 1):] if width > 1 else xp[:, :0]
+    if width > 1:
+        if valid_len is None:
+            tail = xp[:, -(width - 1):]
+        else:
+            # window ending at valid_len: xp rows [valid_len, valid_len+W-2]
+            idx = valid_len[:, None] + jnp.arange(width - 1)[None, :]
+            tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    else:
+        tail = xp[:, :0]
     return out + b, tail
 
 
@@ -139,8 +151,17 @@ def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
 
 def ssm_block(x: jnp.ndarray, p: Params, *, head_dim: int, state: int,
               chunk: int, cache: Params | None = None,
-              cache_index=None, act_in=None, out_proj_fn=None):
+              cache_index=None, register_index=None, valid_len=None,
+              act_in=None, out_proj_fn=None):
     """Full Mamba2 block. Returns (out [B, S, d], new_cache).
+
+    Two cache layouts: the native per-batch cache ({"conv": [B, W-1, C],
+    "state": [B, H, N, P]}), or — when `register_index` [B] is given —
+    engine-owned register slot pools ([n_slots, ...] leaves) that are
+    gathered by slot on entry and scattered back once at the end, so the
+    returned cache is the updated *pool*. `valid_len` [B] masks
+    right-padded chunk tails out of the recurrence (decay 1, update 0) so
+    carried state after a padded serving chunk equals the unpadded run.
 
     `act_in(x, tag)` / `out_proj_fn(y, w)` are the PTQ hooks (capture or
     quantize the in/out projection inputs; out_proj is the online-rotation
@@ -148,6 +169,12 @@ def ssm_block(x: jnp.ndarray, p: Params, *, head_dim: int, state: int,
     b, s, d = x.shape
     d_inner = p["out_proj"].shape[0]
     n_heads = p["A_log"].shape[0]
+
+    paged = register_index is not None and cache is not None
+    if paged:
+        conv_pool, state_pool = cache["conv"], cache["state"]
+        cache = {"conv": conv_pool[register_index],
+                 "state": state_pool[register_index]}
 
     if act_in is not None:
         x = act_in(x, "ssm_in")
@@ -165,13 +192,19 @@ def ssm_block(x: jnp.ndarray, p: Params, *, head_dim: int, state: int,
         new_conv = window[:, 1:]
     else:
         conv_out, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
-                                          init_state=conv_state_in)
+                                          init_state=conv_state_in,
+                                          valid_len=valid_len)
     xbc = jax.nn.silu(conv_out)
 
     xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
     xs = xs.reshape(b, s, n_heads, head_dim)
     xs = shard_act(xs, ("batch", "seq", "ssm_heads", None))
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if valid_len is not None and not decode:
+        # padded tail contributes decay exp(0)=1 and zero update, so the
+        # carried SSD state after `valid_len` tokens is exact
+        live = jnp.arange(s)[None, :] < valid_len[:, None]
+        dtv = jnp.where(live[..., None], dtv, 0.0)
     a = -jnp.exp(p["A_log"])
 
     if decode:
@@ -199,8 +232,17 @@ def ssm_block(x: jnp.ndarray, p: Params, *, head_dim: int, state: int,
 
     new_cache = None
     if cache is not None:
-        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
-                     "state": new_state}
+        if paged:
+            # scatter updated per-row state back to its register slot;
+            # padded rows target the scratch slot (harmless dead writes)
+            new_cache = {
+                "conv": conv_pool.at[register_index].set(
+                    new_conv.astype(conv_pool.dtype)),
+                "state": state_pool.at[register_index].set(new_state),
+            }
+        else:
+            new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                         "state": new_state}
     return out, new_cache
 
 

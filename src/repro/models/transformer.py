@@ -33,12 +33,19 @@ class Model:
     """Functional model wrapper for one ArchConfig."""
 
     def __init__(self, cfg: ArchConfig, *, quant_hooks=None,
-                 remat_policy: str = "nothing"):
+                 remat_policy: str = "nothing",
+                 moe_dense_oracle: bool = False):
         self.cfg = cfg.validate()
         self.pdt = _dtype(cfg.param_dtype)
         self.cdt = _dtype(cfg.compute_dtype)
         # quant_hooks: {"down_proj_fn": fn(h, w)->out, "act_in_fn": fn(x)->x}
         self.quant_hooks = quant_hooks or {}
+        # moe_dense_oracle: route MoE FFNs through the evaluate-all-experts
+        # oracle (per-token exact, chunking-invariant) instead of the
+        # capacity-bounded gather dispatch — parity tests only, where
+        # chunk-length-dependent capacity drops would break chunked-prefill
+        # ≡ whole-prompt comparisons
+        self.moe_dense_oracle = moe_dense_oracle
         # remat_policy: "nothing" saves only layer boundaries (min memory,
         # max recompute — the backward re-runs the layer INCLUDING its
         # ZeRO-3 weight all-gathers); "dots" saves matmul outputs, which
@@ -133,7 +140,8 @@ class Model:
     # ------------------------------------------------------------------
 
     def _apply_block(self, x, blk: Params, cache, cache_index, *,
-                     positions=None, block_table=None, seq_lengths=None):
+                     positions=None, block_table=None, seq_lengths=None,
+                     register_index=None, valid_len=None):
         cfg = self.cfg
         hooks = self.quant_hooks
         new_cache = None
@@ -142,6 +150,7 @@ class Model:
             h, new_cache = S.ssm_block(
                 h, blk["ssm"], head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
                 chunk=cfg.ssm_chunk, cache=cache, cache_index=cache_index,
+                register_index=register_index, valid_len=valid_len,
                 act_in=hooks.get("act_in"),
                 out_proj_fn=hooks.get("ssm_out_proj_fn"))
             return x + h, new_cache
@@ -156,24 +165,35 @@ class Model:
         x = x + h
         h = L.apply_norm(x, blk["ffn_norm"], cfg.norm)
         if cfg.uses_moe:
-            h = M.moe_ffn(h, blk["moe"], n_experts=cfg.n_experts,
-                          top_k=cfg.top_k,
-                          capacity_factor=cfg.capacity_factor, act=cfg.act,
-                          down_proj_fn=hooks.get("moe_down_proj_fn"),
-                          act_in=hooks.get("act_in"),
-                          shared_down_proj_fn=hooks.get("down_proj_fn"))
+            if self.moe_dense_oracle:
+                h = M.moe_ffn_dense_oracle(
+                    h, blk["moe"], n_experts=cfg.n_experts, top_k=cfg.top_k,
+                    act=cfg.act, down_proj_fn=hooks.get("moe_down_proj_fn"),
+                    act_in=hooks.get("act_in"),
+                    shared_down_proj_fn=hooks.get("down_proj_fn"))
+            else:
+                h = M.moe_ffn(h, blk["moe"], n_experts=cfg.n_experts,
+                              top_k=cfg.top_k,
+                              capacity_factor=cfg.capacity_factor,
+                              act=cfg.act,
+                              down_proj_fn=hooks.get("moe_down_proj_fn"),
+                              act_in=hooks.get("act_in"),
+                              shared_down_proj_fn=hooks.get("down_proj_fn"))
         else:
             h = L.mlp(h, blk["ffn"], cfg.act,
                       down_proj_fn=hooks.get("down_proj_fn"),
                       act_in=hooks.get("act_in"))
         return x + h, attn_cache
 
-    def _apply_shared(self, x, shared: Params, cache, cache_index):
+    def _apply_shared(self, x, shared: Params, cache, cache_index, *,
+                      block_table=None, seq_lengths=None):
         cfg = self.cfg
         hooks = self.quant_hooks
         h = L.apply_norm(x, shared["attn_norm"], cfg.norm)
         h, attn_cache = L.attention(h, shared["attn"], self.attn_spec,
                                     cache=cache, cache_index=cache_index,
+                                    block_table=block_table,
+                                    seq_lengths=seq_lengths,
                                     act_in=hooks.get("act_in"))
         x = x + h
         h = L.apply_norm(x, shared["ffn_norm"], cfg.norm)
@@ -230,14 +250,17 @@ class Model:
         return shard_act(x, ("batch", "seq", "embed"))
 
     def _run_layers(self, params, x, *, caches=None, cache_index=None,
-                    block_table=None, seq_lengths=None, remat: bool = False):
+                    block_table=None, seq_lengths=None, register_index=None,
+                    valid_len=None, remat: bool = False):
         cfg = self.cfg
 
         def body(carry, inp):
             blk, cache = inp
             y, new_cache = self._apply_block(carry, blk, cache, cache_index,
                                              block_table=block_table,
-                                             seq_lengths=seq_lengths)
+                                             seq_lengths=seq_lengths,
+                                             register_index=register_index,
+                                             valid_len=valid_len)
             return y, new_cache
 
         if remat:
@@ -267,7 +290,9 @@ class Model:
                 gp, gcache, shared_cache = inp
                 y, new_c = jax.lax.scan(body, carry, (gp, gcache))
                 y, new_sc = self._apply_shared(y, params["shared_attn"],
-                                               shared_cache, cache_index)
+                                               shared_cache, cache_index,
+                                               block_table=block_table,
+                                               seq_lengths=seq_lengths)
                 return y, (new_c, new_sc)
 
             if caches is None:
@@ -366,6 +391,38 @@ class Model:
         return jax.tree.map(
             lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
 
+    def init_paged_state(self, n_pages: int, page_size: int, n_slots: int,
+                         dtype=jnp.bfloat16) -> Params:
+        """Engine-owned partitioned state `{"kv": ..., "register": ...}`.
+
+        kv leaves are page pools ([n_layers/n_groups, n_pages, page_size,
+        ...], block-table-indexed); register leaves are slot pools
+        ([n_layers, n_slots, ...], one fixed slot per admitted sequence).
+        Dense/MoE state is pure kv, pure SSM is pure register, hybrid
+        mixes both kinds.
+        """
+        cfg = self.cfg
+
+        def stack(one, n):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n, *a.shape)), one)
+
+        def ssm_slots():
+            return stack(S.init_ssm_cache(
+                n_slots, cfg.d_model, expand=cfg.ssm_expand,
+                head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                conv_width=cfg.ssm_conv_width, dtype=dtype), cfg.n_layers)
+
+        if cfg.family == "ssm":
+            return {"kv": {}, "register": ssm_slots()}
+        if cfg.family == "hybrid":
+            n_groups, _, _ = self._hybrid_groups()
+            shared = stack(L.init_attention_cache(
+                n_pages, page_size, self.attn_spec, dtype), n_groups)
+            return {"kv": {"shared": shared}, "register": {"ssm": ssm_slots()}}
+        return {"kv": self.init_cache(n_pages, page_size, dtype),
+                "register": {}}
+
     def prefill(self, params: Params, batch: Params, caches: Params):
         """Process the prompt, fill caches, return last-position logits."""
         x = self._embed_inputs(params, batch)
@@ -378,7 +435,8 @@ class Model:
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
                       caches: Params, index: jnp.ndarray,
                       block_table: jnp.ndarray | None = None,
-                      seq_lengths: jnp.ndarray | None = None):
+                      seq_lengths: jnp.ndarray | None = None,
+                      register_index: jnp.ndarray | None = None):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated caches.
 
@@ -386,19 +444,31 @@ class Model:
         per-slot continuous-batching decode step; S > 1 with a scalar
         index is one chunk of an incremental (chunked) prefill, causal
         within the chunk and attending to everything already cached. With
-        `block_table` [B, P], `caches` is the engine's page pool (leaves
-        [n_layers, n_pages, page_size, ...]) and attention runs
+        `block_table` [B, P], kv leaves of `caches` are the engine's page
+        pool ([n_layers, n_pages, page_size, ...]) and attention runs
         block-table-native — new rows are written straight into their
         pages and the paged-attention kernel walks the table;
         `seq_lengths` [B] (the true per-sequence context lengths, 0 for
-        padded batch rows) feed the kernel's ragged early-exit.
+        padded batch rows) feed the kernel's ragged early-exit. With
+        `register_index` [B], SSM leaves of `caches` are register slot
+        pools ([n_layers, n_slots, ...]) gathered/scattered by slot, and
+        `seq_lengths` additionally bound each prefill row's live tokens so
+        right-padded chunk tails stay out of the carried state.
         """
         x = jnp.take(params["embed"], tokens, axis=0).astype(self.cdt)
         x = shard_act(x, ("batch", "seq", "embed"))
+        valid_len = None
+        if register_index is not None and seq_lengths is not None \
+                and tokens.shape[1] > 1:
+            # prefill chunk: index is the scalar fill position, so the
+            # row's live tokens in THIS chunk end at seq_lengths - index
+            valid_len = seq_lengths - jnp.asarray(index, jnp.int32)
         x, new_caches = self._run_layers(params, x, caches=caches,
                                          cache_index=index,
                                          block_table=block_table,
-                                         seq_lengths=seq_lengths)
+                                         seq_lengths=seq_lengths,
+                                         register_index=register_index,
+                                         valid_len=valid_len)
         x = L.apply_norm(x, params["final_norm"], self.cfg.norm)
         logits = x @ params["lm_head"].astype(self.cdt)
         return logits, new_caches

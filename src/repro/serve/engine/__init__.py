@@ -1,21 +1,27 @@
-"""Paged-KV continuous-batching serving engine.
+"""Paged continuous-batching serving engine — one scheduler, any family.
 
 Unifies the three execution paths — bf16, fake-quant (PTQ hooks), and
-packed-int4 integer serving — behind one `ServableModel` adapter, a paged
-KV cache (`pages`: allocator + block tables), and a chunked-prefill
-continuous-batching scheduler (`scheduler`). The data path is
-block-table-native: the pool and block tables flow into each backend's
+packed-int4 integer serving — behind one `ServableModel` adapter, a
+two-kind paged state (`pages`: KV page pools with block tables, plus
+fixed-size register slot pools for SSM-style carried state), and a
+chunked-prefill continuous-batching scheduler (`scheduler`). Each adapter
+derives a `StateSpec` from its config, so dense/MoE (pure kv), pure SSM
+(pure register), and hybrid (both) configs all run through the same
+scheduler with no architecture branches. The kv data path is
+block-table-native: the pools and block tables flow into each backend's
 `forward_chunk`, which writes new KV rows into their pages and attends by
 walking the table in `kernels.ops.paged_attention` — no gathered slab.
 See each module's docstring for the design.
 """
 from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
-                      as_servable)
-from .pages import PageAllocator, PagedKVCache, pages_for
+                      StateSpec, as_servable, derive_state_spec)
+from .pages import (PageAllocator, PagedKVCache, RegisterAllocator,
+                    pages_for)
 from .scheduler import EngineRequest, SamplingParams, ServeEngine
 
 __all__ = [
-    "ServableModel", "DenseModelAdapter", "IntegerModelAdapter",
-    "as_servable", "PageAllocator", "PagedKVCache", "pages_for",
-    "EngineRequest", "SamplingParams", "ServeEngine",
+    "ServableModel", "StateSpec", "derive_state_spec", "DenseModelAdapter",
+    "IntegerModelAdapter", "as_servable", "PageAllocator",
+    "RegisterAllocator", "PagedKVCache", "pages_for", "EngineRequest",
+    "SamplingParams", "ServeEngine",
 ]

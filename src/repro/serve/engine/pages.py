@@ -1,32 +1,50 @@
-"""Paged KV cache: fixed-size pages, per-sequence block tables, allocator.
+"""Paged serving state: KV pages + fixed-size register slots, per sequence.
 
-Instead of one dense `[slots, max_len]` KV region per slot, the engine owns a
-single device-side *page pool* per KV leaf — shape `[n_layers, n_pages,
-page_size, ...]` — and a host-side block table per sequence mapping logical
-positions to pages. Pages are allocated lazily as a sequence grows and freed
-on completion, so pool HBM is shared across sequences of very different
-lengths (the vLLM PagedAttention memory model).
+The engine's device-side state is one partitioned pytree per served model,
+`{"kv": ..., "register": ...}`, because architectures carry two different
+kinds of per-sequence state:
 
-The pool is format-agnostic: it is built by calling the adapter's
-`init_cache(n_pages, page_size)` — the page axis *is* the batch axis — so
-the same machinery pages the bf16 cache ({k, v}) and the asymmetric
-per-(position, head) int8/int4 KV cache ({k, v, k_scale, v_scale, k_zero, v_zero}): integer
-pages carry their codes *and* their scale/zero rows.
+  * **kv** leaves grow with sequence length. They live in a single *page
+    pool* per leaf — shape `[n_layers, n_pages, page_size, ...]` — with a
+    host-side block table per sequence mapping logical positions to pages.
+    Pages are allocated lazily as a sequence grows and freed on completion,
+    so pool HBM is shared across sequences of very different lengths (the
+    vLLM PagedAttention memory model). Dense/MoE attention caches are pure
+    kv; a hybrid's shared-attention cache is its kv part.
+  * **register** leaves are fixed-size per sequence — a Mamba2 layer's conv
+    tail `[W-1, conv_dim]` and SSD state `[H, N, P]` do not grow with
+    context. They live in *slot pools* — `[n_layers, n_slots, ...]` — and a
+    sequence is assigned one register slot at admission, carried until
+    release. No block table: the slot id indexes axis 1 of every register
+    leaf directly. Pure-SSM models are all register; hybrids mix both kinds
+    in one state pytree.
 
-The data path is block-table-native: the scheduler hands the pool and the
-per-sequence block-table rows straight to the backend's `forward_chunk`,
-which scatters each new KV row into its page and attends by walking the
-table inside `kernels.ops.paged_attention` (one Mosaic kernel on TPU: the
-page ids are scalar-prefetched and each page is DMA'd into VMEM exactly
-once, with online softmax across the walk). No contiguous
-`[n_layers, B, P·page_size, ...]` slab is ever materialised. This module
-therefore only keeps the *bookkeeping* — allocator + block tables — plus
-the legacy `gather_pages` / `scatter_*_rows` primitives, which survive
-purely as the test oracle the paged kernel is checked against.
+The kv data path is block-table-native: the scheduler hands the pool and
+the per-sequence block-table rows straight to the backend's
+`forward_chunk`, which scatters each new KV row into its page and attends
+by walking the table inside `kernels.ops.paged_attention` (one Mosaic
+kernel on TPU: the page ids are scalar-prefetched and each page is DMA'd
+into VMEM exactly once, with online softmax across the walk). No
+contiguous slab is ever materialised. Register leaves are gathered by slot
+index at the top of the forward and scattered back once per call.
 
-Page 0 is reserved as a scratch page: padded batch rows (inactive slots) and
-padded block-table entries point at it, so their masked reads and dead
-writes can never touch a live sequence's KV.
+Both pools are format-agnostic: they are built by the adapter's
+`init_state(n_pages, page_size, n_slots)` — the page/slot axis *is* the
+batch axis — so the same machinery pages the bf16 cache ({k, v}), the
+asymmetric per-(position, head) int8/int4 KV cache (codes *and* their
+scale/zero rows), and the SSM conv/SSD slot pools.
+
+This module keeps the *bookkeeping*: the two allocators, block tables and
+register-slot maps, and release-time scrubbing (a freed register slot is
+zeroed before reuse — unlike KV rows, register state is read in full at
+the next admission, so stale state would leak across requests; freed KV
+pages are zeroed through the same method for defence in depth). The
+legacy `gather_pages` / `scatter_*_rows` primitives survive purely as the
+test oracle the paged kernel is checked against.
+
+Page 0 / slot 0 are reserved as scratch: padded batch rows (inactive
+slots) and padded block-table entries point at them, so their masked
+reads and dead writes can never touch a live sequence's state.
 """
 from __future__ import annotations
 
@@ -38,6 +56,7 @@ import jax.numpy as jnp
 Params = dict[str, Any]
 
 SCRATCH_PAGE = 0
+SCRATCH_SLOT = 0
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -88,6 +107,43 @@ class PageAllocator:
             batch.add(p)
         self._free.extend(pages)
         self._free_set.update(batch)
+
+
+class RegisterAllocator:
+    """Free-list allocator over register slots — the `PageAllocator`
+    sibling for the fixed-size state kind (slot 0 reserved as scratch).
+
+    A sequence holds exactly one slot for its whole lifetime, so slots are
+    allocated/freed one at a time and capacity equals the engine's
+    max-concurrent-sequences bound.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 2:
+            raise ValueError("register pool needs at least 2 slots "
+                             "(slot 0 is scratch)")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, SCRATCH_SLOT, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable slots (excludes the scratch slot)."""
+        return self.n_slots - 1
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise MemoryError("register slots exhausted")
+        return self._free.pop()
+
+    def free(self, slot: int):
+        if slot <= SCRATCH_SLOT or slot >= self.n_slots \
+                or slot in self._free:
+            raise ValueError(f"double/invalid free of register slot {slot}")
+        self._free.append(slot)
 
 
 @jax.jit
@@ -143,18 +199,42 @@ def scatter_prefill_rows(pool: Params, slab: Params, positions: jnp.ndarray,
 
 
 class PagedKVCache:
-    """Pool + allocator + per-sequence block tables for one served model."""
+    """Partitioned state + allocators + per-sequence block tables and
+    register-slot map for one served model.
 
-    def __init__(self, pool: Params, n_pages: int, page_size: int):
-        self.pool = pool
+    `state` is the `{"kv": ..., "register": ...}` pytree the adapter's
+    `init_state` built (a bare kv pool is accepted and wrapped, for the
+    test oracles that only exercise the kv bookkeeping). `pool` aliases
+    `state["kv"]` for the kv-only callers.
+    """
+
+    def __init__(self, state: Params, n_pages: int, page_size: int,
+                 n_slots: int = 0):
+        if not (isinstance(state, dict) and set(state) == {"kv", "register"}):
+            state = {"kv": state, "register": {}}
+        self.state = state
         self.page_size = page_size
         self.allocator = PageAllocator(n_pages)
         self.tables: dict[int, list[int]] = {}
+        self.has_register = bool(jax.tree.leaves(state["register"]))
+        self.registers = RegisterAllocator(n_slots) if self.has_register \
+            else None
+        self.slots: dict[int, int] = {}
+
+    @property
+    def pool(self) -> Params:
+        return self.state["kv"]
+
+    @pool.setter
+    def pool(self, value: Params):
+        self.state["kv"] = value
 
     def open(self, rid: int):
         if rid in self.tables:
             raise ValueError(f"sequence {rid} already open")
         self.tables[rid] = []
+        if self.registers is not None:
+            self.slots[rid] = self.registers.alloc()
 
     def ensure(self, rid: int, n_tokens: int):
         """Grow `rid`'s block table to cover `n_tokens` positions."""
@@ -164,15 +244,44 @@ class PagedKVCache:
             table.extend(self.allocator.alloc(need))
 
     def release(self, rid: int):
-        self.allocator.free(self.tables.pop(rid))
+        """Return `rid`'s pages and register slot, scrubbing both first."""
+        pages = self.tables.pop(rid)
+        slot = self.slots.pop(rid, None)
+        self.scrub(pages, slot)
+        self.allocator.free(pages)
+        if slot is not None:
+            self.registers.free(slot)
+
+    def scrub(self, pages: list[int], slot: int | None):
+        """Zero released state rows of BOTH kinds so a recycled page or
+        slot can never leak its predecessor's state.
+
+        For register leaves this is load-bearing: the next sequence reads
+        its slot's full state at admission (the SSM carried conv/SSD
+        state), so stale rows would silently contaminate it. Freed KV
+        pages are only ever re-read after being overwritten (the causal
+        mask / seq_lengths hide rows past the fill point), so their zeroing
+        is defence in depth through the same method.
+        """
+        if pages and jax.tree.leaves(self.state["kv"]):
+            idx = jnp.asarray(pages, jnp.int32)
+            self.state["kv"] = jax.tree.map(
+                lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)),
+                self.state["kv"])
+        if slot is not None:
+            self.state["register"] = jax.tree.map(
+                lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
+                self.state["register"])
 
     def page_of(self, rid: int, position: int) -> tuple[int, int]:
         """(page id, in-page offset) holding `position` of sequence `rid`."""
         return (self.tables[rid][position // self.page_size],
                 position % self.page_size)
 
-    def block_table_array(self, rids: list[int], n_cols: int) -> jnp.ndarray:
+    def block_table_array(self, rids: list[int | None],
+                          n_cols: int) -> jnp.ndarray:
         """[len(rids), n_cols] int32 table, short rows padded with scratch.
+        `None` entries are padded batch rows (all-scratch).
 
         A row longer than `n_cols` is an error, never a silent truncation:
         a too-narrow table would drop live pages from the kernel's walk
@@ -186,3 +295,11 @@ class PagedKVCache:
                     f"but only {n_cols} columns were requested")
         bt = [row + [SCRATCH_PAGE] * (n_cols - len(row)) for row in bt]
         return jnp.asarray(bt, jnp.int32)
+
+    def register_index_array(self, rids: list[int | None]) -> jnp.ndarray:
+        """[len(rids)] int32 register slot per batch row; `None` (padded)
+        rows point at the scratch slot, so their dead writes never touch a
+        live sequence's state."""
+        return jnp.asarray(
+            [self.slots[r] if r is not None else SCRATCH_SLOT for r in rids],
+            jnp.int32)

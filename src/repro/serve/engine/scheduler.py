@@ -1,27 +1,36 @@
-"""Continuous-batching scheduler over the paged KV cache.
+"""Continuous-batching scheduler over the paged serving state.
 
 Scheduling model (one `step()` = one engine iteration):
 
   1. **Admission** — requests are admitted whenever a sequence slot is free
      and the page allocator can cover the request's worst case
-     (`pages_for(prompt + max_new)`); reservation-based admission means a
-     running sequence can never hit an out-of-pages fault mid-decode.
+     (`pages_for(prompt + max_new)` KV pages when the model's state spec
+     has a kv part, plus one register slot when it has a register part);
+     reservation-based admission means a running sequence can never hit an
+     out-of-pages fault mid-decode. Register slots are sized to `max_seqs`,
+     so a free sequence slot implies a free register slot.
   2. **Decode** — every generating sequence advances one token in a single
      batched `forward_chunk` call with per-slot fill positions (vector
-     cache index) and its block-table rows. The batch is padded to
-     `max_seqs` rows pointing at the scratch page, so batch shape — and
-     hence the jit cache — is fixed.
+     cache index), its block-table rows, and its register slot index. The
+     batch is padded to `max_seqs` rows pointing at the scratch page/slot,
+     so batch shape — and hence the jit cache — is fixed.
   3. **Chunked prefill** — whatever remains of the per-step token budget
      goes to prompt processing, `prefill_chunk` tokens at a time through
      the same `forward_chunk` entry (causal within the chunk, scalar fill
      index), instead of the legacy one-token-per-step prompt drip. Chunks
-     are padded to the next power of two so prefill shapes stay bounded.
+     are padded to the next power of two so prefill shapes stay bounded;
+     `seq_lengths` carries each row's true extent so SSM state carried
+     across chunks ignores the padded tail.
 
-Both phases are block-table-native: the page pool and block tables go
-straight into `forward_chunk`, which writes each new KV row into its page
-and walks the table inside the paged-attention kernel — the scheduler
-never materialises a gathered slab (`pages.gather_pages` /
-`pages.scatter_*_rows` survive only as the test oracle).
+The scheduler itself never branches on architecture: it reads the
+adapter's `StateSpec` to know which index kinds to build. Dense/MoE runs
+are pure kv (block tables only), pure SSMs are pure register (no tables,
+no page walk), hybrids pass both. The kv phases stay block-table-native:
+the state and block tables go straight into `forward_chunk`, which writes
+each new KV row into its page and walks the table inside the
+paged-attention kernel — the scheduler never materialises a gathered slab
+(`pages.gather_pages` / `pages.scatter_*_rows` survive only as the test
+oracle).
 
 Sampling threads one PRNG key per engine step (split per request batch), so
 `temperature > 0` is genuinely stochastic — per-request `SamplingParams`
@@ -122,12 +131,18 @@ class ServeEngine:
                  prefill_chunk: int = 8, token_budget: int | None = None,
                  seed: int = 0, record_logits: bool = False):
         self.adapter = adapter
+        self.spec = adapter.state_spec
         self.max_seqs = max_seqs
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget or max(max_seqs, prefill_chunk)
         self.record_logits = record_logits
-        self.kv = PagedKVCache(adapter.init_cache(n_pages, page_size),
-                               n_pages, page_size)
+        # one register slot per concurrent sequence (+ the scratch slot):
+        # admission is bounded by max_seqs, so slots can never run out
+        # before sequence slots do
+        n_slots = max_seqs + 1
+        self.kv = PagedKVCache(adapter.init_state(n_pages, page_size,
+                                                  n_slots),
+                               n_pages, page_size, n_slots=n_slots)
         self.queue: list[EngineRequest] = []
         self.prefilling: list[EngineRequest] = []
         self.decoding: list[EngineRequest] = []
@@ -172,19 +187,25 @@ class ServeEngine:
                              "state; submit a fresh EngineRequest")
         if any(req.rid == r.rid for r in self.queue + self.active):
             raise ValueError(f"rid {req.rid} already queued or active")
-        need = pages_for(len(req.prompt) + req.sampling.max_new,
-                         self.kv.page_size)
+        need = self._pages_needed(req)
         if need > self.kv.allocator.capacity:
             raise ValueError(
                 f"request {req.rid} needs {need} pages; pool capacity is "
                 f"{self.kv.allocator.capacity}")
         self.queue.append(req)
 
+    def _pages_needed(self, req: EngineRequest) -> int:
+        """Worst-case KV pages this request reserves at admission (0 for
+        register-only models — their state never grows)."""
+        if not self.spec.kv:
+            return 0
+        return pages_for(len(req.prompt) + req.sampling.max_new,
+                         self.kv.page_size)
+
     def _admit(self):
         while self.queue and len(self.active) < self.max_seqs:
             req = self.queue[0]
-            need = pages_for(len(req.prompt) + req.sampling.max_new,
-                             self.kv.page_size)
+            need = self._pages_needed(req)
             if sum(self._committed.values()) + need \
                     > self.kv.allocator.capacity:
                 return           # head-of-line blocks until pages free up
@@ -237,39 +258,46 @@ class ServeEngine:
         return any(r.sampling.top_k > 0 or r.sampling.top_p < 1.0
                    for r in batch)
 
-    def _decode_impl(self, pool, params, key, bt, tokens, fill, lens, temps,
-                     top_ks, top_ps, *, filtered):
+    def _decode_impl(self, state, params, key, bt, reg, tokens, fill, lens,
+                     temps, top_ks, top_ps, *, filtered):
         # block-table-native: the forward writes each new KV row into its
         # page and attends by walking `bt` — no gathered slab exists.
         # `lens` are the true per-slot context lengths (0 for padded
         # rows): the kernel's ragged early-exit walks only each
-        # sequence's live pages instead of every table column.
-        logits, pool = self.adapter.forward_chunk(params, tokens, pool,
-                                                  fill, bt, lens)
+        # sequence's live pages instead of every table column. `reg` is
+        # each row's register slot (scratch for padded rows) for models
+        # whose spec carries fixed-size state.
+        logits, state = self.adapter.forward_chunk(params, tokens, state,
+                                                   fill, bt, lens, reg)
         key, sub = jax.random.split(key)
         lg = logits[:, 0].astype(jnp.float32)
-        return pool, key, lg, _sample_tokens(sub, lg, temps, top_ks, top_ps,
-                                             filtered=filtered)
+        return state, key, lg, _sample_tokens(sub, lg, temps, top_ks, top_ps,
+                                              filtered=filtered)
 
     def _decode_once(self) -> list[EngineRequest]:
         batch = self.decoding
         b = self.max_seqs
-        for req in batch:
-            self.kv.ensure(req.rid, req.n_cached + 1)
-        n_cols = _next_pow2(max(
-            pages_for(r.n_cached + 1, self.kv.page_size) for r in batch))
         rids = [r.rid for r in batch] + [None] * (b - len(batch))
-        bt = self.kv.block_table_array(rids, n_cols)
+        new_lens = [r.n_cached + 1 for r in batch]
+        if self.spec.kv:
+            for req in batch:
+                self.kv.ensure(req.rid, req.n_cached + 1)
+            n_cols = _next_pow2(max(
+                pages_for(r.n_cached + 1, self.kv.page_size) for r in batch))
+            bt = self.kv.block_table_array(rids, n_cols)
+            self.pages_walked += sum(pages_for(n, self.kv.page_size)
+                                     for n in new_lens)
+            self.pages_walked_dense += b * n_cols
+        else:
+            bt = None
+        reg = self.kv.register_index_array(rids) if self.spec.register \
+            else None
         tokens = jnp.asarray(
             [[r.next_token] for r in batch] + [[0]] * (b - len(batch)),
             jnp.int32)
         fill = jnp.asarray([r.n_cached for r in batch]
                            + [0] * (b - len(batch)), jnp.int32)
-        new_lens = [r.n_cached + 1 for r in batch]
         lens = jnp.asarray(new_lens + [0] * (b - len(batch)), jnp.int32)
-        self.pages_walked += sum(pages_for(n, self.kv.page_size)
-                                 for n in new_lens)
-        self.pages_walked_dense += b * n_cols
 
         temps = jnp.asarray([r.sampling.temperature for r in batch]
                             + [0.0] * (b - len(batch)), jnp.float32)
@@ -278,12 +306,12 @@ class ServeEngine:
         top_ps = jnp.asarray([r.sampling.top_p for r in batch]
                              + [1.0] * (b - len(batch)), jnp.float32)
         filtered = self._wants_filtering(batch)
-        self.kv.pool, self._key, logits, toks = self._fused(
+        self.kv.state, self._key, logits, toks = self._fused(
             "decode",
             functools.partial(self._decode_impl, filtered=filtered),
             variant=filtered)(
-            self.kv.pool, self.adapter.params, self._key, bt, tokens, fill,
-            lens, temps, top_ks, top_ps)
+            self.kv.state, self.adapter.params, self._key, bt, reg, tokens,
+            fill, lens, temps, top_ks, top_ps)
         toks = np.asarray(toks)
         finished = []
         for i, req in enumerate(list(batch)):
@@ -304,7 +332,7 @@ class ServeEngine:
     # chunked prefill
     # ------------------------------------------------------------------
 
-    def _prefill_impl(self, pool, params, key, bt, tokens, start, last,
+    def _prefill_impl(self, state, params, key, bt, reg, tokens, start, last,
                       lens, temp, top_k, top_p, *, filtered):
         # padded tail rows are computed too (their queries may attend the
         # garbage keys the same forward wrote for earlier padding tokens,
@@ -314,15 +342,18 @@ class ServeEngine:
         # is the true cached length after this chunk (start + real): the
         # kernel's early-exit trims the walk to the live pages, which
         # also stops the padded tail queries from touching columns past
-        # them (their outputs are discarded either way).
-        logits, pool = self.adapter.forward_chunk(params, tokens, pool,
-                                                  start, bt, lens)
+        # them (their outputs are discarded either way), and — via
+        # valid_len = lens - start inside the model — keeps the padded
+        # tail out of register-kind (SSM) carried state, whose update is
+        # a recurrence rather than a masked read.
+        logits, state = self.adapter.forward_chunk(params, tokens, state,
+                                                   start, bt, lens, reg)
         key, sub = jax.random.split(key)
         lg = jax.lax.dynamic_index_in_dim(logits, last, axis=1,
                                           keepdims=False)[0]
         lg = lg.astype(jnp.float32)
-        return pool, key, lg, _sample_tokens(sub, lg[None], temp, top_k,
-                                             top_p, filtered=filtered)[0]
+        return state, key, lg, _sample_tokens(sub, lg[None], temp, top_k,
+                                              top_p, filtered=filtered)[0]
 
     def _prefill_once(self, budget: int) -> tuple[int, list[EngineRequest]]:
         """Advance the head-of-line prefill by up to `budget` prompt
@@ -331,22 +362,27 @@ class ServeEngine:
         start = req.n_cached
         real = min(self.prefill_chunk, budget, len(req.prompt) - start)
         padded = _next_pow2(real)
-        self.kv.ensure(req.rid, start + real)
-        n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
-        bt = self.kv.block_table_array([req.rid], n_cols)
+        if self.spec.kv:
+            self.kv.ensure(req.rid, start + real)
+            n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
+            bt = self.kv.block_table_array([req.rid], n_cols)
+            self.pages_walked += pages_for(start + real, self.kv.page_size)
+            self.pages_walked_dense += n_cols
+        else:
+            bt = None
+        reg = self.kv.register_index_array([req.rid]) if self.spec.register \
+            else None
 
         # every device-side shape depends only on (padded, n_cols), both
         # powers of two, so prefill compiles a bounded set of variants;
         # `last` (= real - 1) rides along as a traced scalar
         chunk = req.prompt[start:start + real] + [0] * (padded - real)
-        self.pages_walked += pages_for(start + real, self.kv.page_size)
-        self.pages_walked_dense += n_cols
         filtered = self._wants_filtering([req])
-        self.kv.pool, self._key, last, tok = self._fused(
+        self.kv.state, self._key, last, tok = self._fused(
             "prefill",
             functools.partial(self._prefill_impl, filtered=filtered),
             variant=filtered)(
-            self.kv.pool, self.adapter.params, self._key, bt,
+            self.kv.state, self.adapter.params, self._key, bt, reg,
             jnp.asarray([chunk], jnp.int32), jnp.asarray(start, jnp.int32),
             jnp.asarray(real - 1, jnp.int32),
             jnp.asarray([start + real], jnp.int32),

@@ -269,6 +269,129 @@ def test_oversized_request_rejected(stack):
         eng.submit(stale)
 
 
+# ----------------------------------------------------------------------
+# generalized state model: ssm / hybrid / moe families through the same
+# scheduler (kv pages, register slots, or both, per the adapter's spec)
+# ----------------------------------------------------------------------
+
+FAMILY_ARCHS = ["mamba2-1.3b", "zamba2-1.2b", "deepseek-moe-16b"]
+
+
+@pytest.fixture(scope="module")
+def family_stack():
+    """One (cfg, model, params, adapter) per non-dense family. MoE runs
+    through the dense oracle (per-token exact → chunking-invariant): the
+    capacity-bounded dispatch's drops depend on chunk length, so gather
+    dispatch cannot satisfy a chunked≡whole-prompt parity contract."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = get_config(arch).reduced()
+            kw = {"moe_dense_oracle": True} if cfg.uses_moe else {}
+            model = build_model(cfg, **kw)
+            params = model.init(jax.random.PRNGKey(1))
+            cache[arch] = (cfg, model, params,
+                           as_servable(model, params, cache_dtype=jnp.float32))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_paged_engine_matches_dense_path_families(family_stack, arch):
+    """Acceptance: the paged engine serves ssm (register slots only),
+    hybrid (kv pages + register slots), and moe (kv pages + routed FFN)
+    smoke configs with the same greedy tokens and logits as the
+    dense-cache path."""
+    cfg, model, params, adapter = family_stack(arch)
+    spec = adapter.state_spec
+    assert spec.kv == (cfg.family != "ssm")
+    assert spec.register == (cfg.family in ("ssm", "hybrid"))
+    _, done = _engine_run(adapter, PROMPTS, n_pages=65)
+    for rid, prompt in enumerate(PROMPTS):
+        want_toks, want_logits = _dense_greedy(adapter, prompt, MAX_NEW)
+        req = done[rid]
+        assert req.generated == want_toks, (rid, req.generated, want_toks)
+        for got, want in zip(req.step_logits, want_logits):
+            assert np.corrcoef(got, want)[0, 1] >= 0.999
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_chunked_prefill_matches_stepwise_families(family_stack, arch):
+    """Chunked prefill ≡ one-token-at-a-time prefill for the new
+    families: carried SSM state across padded chunk boundaries must be
+    exact (valid_len masking), not just close."""
+    _, _, _, adapter = family_stack(arch)
+    _, chunked = _engine_run(adapter, PROMPTS, n_pages=65, prefill_chunk=4)
+    _, stepwise = _engine_run(adapter, PROMPTS, n_pages=65, prefill_chunk=1)
+    for rid in range(len(PROMPTS)):
+        assert chunked[rid].generated == stepwise[rid].generated
+        for a, b in zip(chunked[rid].step_logits, stepwise[rid].step_logits):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-1.2b"])
+def test_register_slot_leak_accounting(family_stack, arch):
+    """admit → finish → readmit: every register slot returns to the free
+    list, a recycled slot is reused for the next admission, and scrubbing
+    on release means it cannot observe its predecessor's state (all
+    non-scratch slot rows are zero between runs — satellite bugfix)."""
+    _, _, _, adapter = family_stack(arch)
+    eng, _ = _engine_run(adapter, PROMPTS, n_pages=65, max_seqs=2)
+    regs = eng.kv.registers
+    assert regs is not None
+    assert regs.n_free == regs.capacity == 2
+    assert not eng.kv.slots
+    # scrub-on-release: every allocatable slot (and, for hybrid, every
+    # freed kv page) holds zeros — a recycled slot/page cannot leak
+    for leaf in jax.tree.leaves(eng.kv.state["register"]):
+        assert bool(jnp.all(leaf[:, 1:] == 0)), "stale register state"
+    for leaf in jax.tree.leaves(eng.kv.state["kv"]):
+        assert bool(jnp.all(leaf[:, 1:] == 0)), "stale kv pages"
+
+    # readmission reuses the freed slot and sees zeroed state
+    used_before = set(range(1, regs.n_slots)) - set(regs._free)
+    assert not used_before
+    eng.submit(EngineRequest(rid=99, prompt=[5, 6, 7],
+                             sampling=SamplingParams(max_new=2)))
+    eng.step()
+    assert eng.kv.slots[99] in range(1, regs.n_slots)
+    while eng.queue or eng.active:
+        eng.step()
+    assert regs.n_free == regs.capacity
+
+
+def test_moe_capacity_path_serves_end_to_end():
+    """The real capacity-bounded gather dispatch (no oracle) must serve
+    through the engine too — no parity contract (drops are
+    chunk-length-dependent by design), but generation completes with
+    finite logits and clean page accounting."""
+    cfg = get_config("deepseek-moe-16b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    adapter = as_servable(model, params)
+    eng, done = _engine_run(adapter, PROMPTS, n_pages=65)
+    for rid in range(len(PROMPTS)):
+        assert len(done[rid].generated) == MAX_NEW
+        assert all(np.isfinite(lg).all() for lg in done[rid].step_logits)
+    assert eng.kv.allocator.n_free == eng.kv.allocator.capacity
+
+
+@pytest.mark.parametrize("arch,match", [
+    ("hubert-xlarge", "encoder"),        # no autoregressive decode
+    ("internvl2-2b", "frontend"),        # non-token inputs
+])
+def test_adapter_rejects_unservable_families(arch, match):
+    """Capability check regression: genuinely unservable configs fail at
+    adapter construction with a clear error, not deep inside the engine."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match=match):
+        as_servable(model, params)
+
+
 def test_engine_respects_use_kernels_scope(stack):
     """The fused phase jits must compile once per kernels-enabled state
     (like `QuantizedDenseLM._jitted`), so dispatched-vs-reference

@@ -171,6 +171,58 @@ def test_ssd_chunked_matches_sequential():
     np.testing.assert_allclose(np.asarray(state), hstate, rtol=2e-3, atol=2e-3)
 
 
+def test_ssm_block_chunked_carry_matches_recurrent_decode():
+    """Carried-state prefill parity: feeding a sequence through
+    `ssm_block` in several chunks with the cache carried across calls
+    must match a stepwise s==1 recurrent decode loop — including when the
+    final chunk is right-padded and `valid_len` masks the tail (the
+    serving engine's chunked-prefill path)."""
+    from repro.models import ssm as S
+
+    cfg_d, expand, head_dim, state, width = 32, 2, 8, 4, 4
+    p = S.init_ssm(jax.random.PRNGKey(0), cfg_d, expand=expand,
+                   head_dim=head_dim, state=state, conv_width=width,
+                   dtype=jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg_d))
+
+    def fresh_cache():
+        return S.init_ssm_cache(b, cfg_d, expand=expand, head_dim=head_dim,
+                                state=state, conv_width=width,
+                                dtype=jnp.float32)
+
+    # stepwise recurrent decode — the exact reference
+    cache = fresh_cache()
+    ys = []
+    for t in range(s):
+        y, cache = S.ssm_block(x[:, t:t + 1], p, head_dim=head_dim,
+                               state=state, chunk=8, cache=cache)
+        ys.append(y)
+    want = jnp.concatenate(ys, axis=1)
+    want_cache = cache
+
+    # chunked with carried state; last chunk right-padded to 8 with
+    # valid_len=4 masking the garbage tail out of the carried state
+    cache = fresh_cache()
+    y1, cache = S.ssm_block(x[:, :8], p, head_dim=head_dim, state=state,
+                            chunk=4, cache=cache)
+    xpad = jnp.concatenate(
+        [x[:, 8:], jnp.ones((b, 4, cfg_d), x.dtype) * 7.7], axis=1)
+    y2, cache = S.ssm_block(xpad, p, head_dim=head_dim, state=state,
+                            chunk=4, cache=cache,
+                            valid_len=jnp.asarray([4, 4], jnp.int32))
+    got = jnp.concatenate([y1, y2[:, :4]], axis=1)
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(want_cache["state"]),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["conv"]),
+                               np.asarray(want_cache["conv"]),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_chunked_attention_matches_dense():
     from repro.models.layers import _chunked_attention, _dense_attention
     b, s, h, kh, dh = 2, 40, 4, 2, 16
