@@ -18,7 +18,9 @@ times. The work reduction is real even in interpret mode on this host:
 skipped columns run neither their page copy nor their softmax update.
 
 Rows are appended to `artifacts/BENCH_kernels.json` so the kernel perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs; `_check_schema` validates every row
+against its op family's required fields before anything is written, so a
+partial row fails the smoke job instead of landing in the history.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py [--smoke]
 """
@@ -189,6 +191,43 @@ def paged_attention_bench(*, smoke: bool, iters: int = 5):
     return rows
 
 
+# required measurement fields per op family — `_check_schema` refuses to
+# append a history row that lost one (mirrors serve_bench's row check)
+_ROW_FIELDS = {
+    "block_hadamard": ("cpu_ref_us", "model_bytes", "model_flops",
+                       "v5e_time_us", "bound"),
+    "hadamard_quant": ("cpu_ref_us", "model_bytes", "model_flops",
+                       "v5e_time_us", "bound"),
+    "fusion_hbm": ("value",),
+    "paged_attention": ("ctx", "kv_heads", "q_heads", "kv_splits",
+                        "page_size", "batch", "pages_per_step",
+                        "us_per_step"),
+    "decode": ("decode_step_us",),
+}
+
+
+def _check_schema(rows):
+    """Every row must carry `op` plus the measurement fields its op family
+    defines — a bench path that crashed mid-collection or renamed a field
+    fails the smoke job instead of silently appending a partial row to the
+    JSON history."""
+    for row in rows:
+        op = row.get("op")
+        if not op:
+            raise ValueError(f"bench row {row!r} is missing 'op'")
+        for prefix, fields in _ROW_FIELDS.items():
+            if op.startswith(prefix):
+                missing = [k for k in fields if k not in row]
+                if missing:
+                    raise ValueError(
+                        f"bench row {op!r} is missing required field(s) "
+                        f"{missing}; refusing to write partial history")
+                break
+        else:
+            raise ValueError(f"bench row has unknown op family {op!r}; "
+                             "add its required fields to _ROW_FIELDS")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -209,6 +248,7 @@ def main(argv=None):
         "smoke": bool(args.smoke),
         "rows": rows,
     }
+    _check_schema(rows)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     history = []
     if os.path.exists(args.out):

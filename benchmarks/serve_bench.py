@@ -108,9 +108,9 @@ def bench_engine(adapter, prompts, max_new, slots, max_len, page_size,
 
     def submit():
         done.clear()
-        # reset at each round boundary so the counters cover exactly the
+        # reset at each round boundary so the registry covers exactly the
         # measured trace (the warmup round re-runs the same requests)
-        eng.pages_walked = eng.pages_walked_dense = 0
+        eng.reset_metrics()
         for rid, p in enumerate(prompts):
             eng.submit(EngineRequest(
                 rid=rid, prompt=list(p),
@@ -121,11 +121,14 @@ def bench_engine(adapter, prompts, max_new, slots, max_len, page_size,
         lambda: bool(eng.queue or eng.active),
         lambda: sum(len(r.generated) for r in done)
         + sum(len(r.generated) for r in eng.active))
-    # walked-pages accounting across the measured trace: what the ragged
-    # early-exit actually walked vs the padded-batch × full-table walk of
-    # the pre-flash-decode kernel (per attention dispatch, per layer)
-    pages = {"pages_walked": eng.pages_walked,
-             "pages_walked_dense": eng.pages_walked_dense}
+    # engine accounting comes off the registry snapshot — the same export
+    # surface the launcher writes and CI validates — not engine internals.
+    # walked-pages: what the ragged early-exit actually walked vs the
+    # padded-batch × full-table walk of the pre-flash-decode kernel (per
+    # attention dispatch, per layer)
+    c = eng.metrics_snapshot()["counters"]
+    pages = {"pages_walked": c["engine.pages_walked"],
+             "pages_walked_dense": c["engine.pages_walked_dense"]}
     return wall, lat, steps, pages
 
 
@@ -335,10 +338,13 @@ def main(argv=None):
         rows.append(row)
         print(",".join(str(row[k]) for k in row))
 
+    from repro.serve.telemetry import SCHEMA_VERSION
+
     out = {
         "bench": "serve",
         "backend": jax.default_backend(),
         "smoke": bool(args.smoke),
+        "metrics_schema_version": SCHEMA_VERSION,
         "config": {"arch": "llama3-1b/reduced", "requests": n_req,
                    "max_new": max_new, "slots": slots, "max_len": max_len,
                    "page_size": page, "prefill_chunk": chunk,
@@ -351,6 +357,16 @@ def main(argv=None):
     if os.path.exists(args.out):
         with open(args.out) as f:
             history = json.load(f).get("history", [])
+    # trajectory guard: a row stamped with an older telemetry schema than
+    # the history's newest means this checkout regressed (or the schema
+    # bump was reverted) — refuse to append rather than mix schemas
+    newest = max((h.get("metrics_schema_version", 0) for h in history),
+                 default=0)
+    if out["metrics_schema_version"] < newest:
+        raise SystemExit(
+            f"refusing to append a metrics_schema_version="
+            f"{out['metrics_schema_version']} row to a history whose newest "
+            f"is {newest}")
     history.append(out)
     with open(args.out, "w") as f:
         json.dump({"history": history}, f, indent=1)

@@ -23,6 +23,12 @@ The serving engine
 * **Unified adapter** (`engine.adapter`): the same engine serves the bf16
   model, the fake-quant PTQ output (shown here), and the packed-int4
   `QuantizedDenseLM` — `as_servable(model, params)` picks the adapter.
+* **Telemetry** (`repro.serve.telemetry`): every engine counter lives in
+  a `MetricsRegistry` exported via `engine.metrics_snapshot()` (versioned,
+  schema-validated), and an optional `Tracer` records request lifecycles
+  and fused dispatches as Chrome Trace JSON for Perfetto — both shown
+  below. Tracing is bit-path-neutral: generations are identical with it
+  on or off.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -36,6 +42,7 @@ from repro.core.synthetic import inject_outlier_channels
 from repro.models.transformer import build_model
 from repro.serve.engine import (EngineRequest, SamplingParams, ServeEngine,
                                 as_servable)
+from repro.serve.telemetry import Tracer, validate_snapshot
 
 cfg = get_config("qwen1.5-0.5b").reduced()
 model = build_model(cfg)
@@ -48,8 +55,10 @@ result = PL.quantize_model(model, params, calib,
                            PL.preset("perq_star", block_size=16))
 qmodel = PL.build_quantized_model(model, result)
 
+tracer = Tracer()
 engine = ServeEngine(as_servable(qmodel, result.params, name="fake-quant"),
-                     n_pages=33, page_size=8, max_seqs=4, prefill_chunk=8)
+                     n_pages=33, page_size=8, max_seqs=4, prefill_chunk=8,
+                     tracer=tracer)
 rng = np.random.default_rng(0)
 for rid in range(6):
     prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 9)).tolist()
@@ -63,3 +72,14 @@ print(f"served {len(done)} requests in {engine.n_steps} engine steps "
       f"decode tokens)")
 for r in sorted(done, key=lambda r: r.rid):
     print(f"  req {r.rid}: prompt {r.prompt} → generated {r.generated}")
+
+# the registry snapshot is the one export surface: versioned, validated,
+# and the source for the launcher's summary line and the serve bench rows
+snap = engine.metrics_snapshot()
+validate_snapshot(snap)
+occ = snap["histograms"]["engine.decode.batch_occupancy"]
+print(f"telemetry: schema v{snap['schema_version']}, "
+      f"peak pages {snap['gauges']['engine.pages.peak_in_use']:.0f}, "
+      f"decode batch occupancy p50 {occ['p50']:.2f}")
+tracer.save("/tmp/serve_trace.json")    # open in https://ui.perfetto.dev
+print(f"trace: {len(tracer.events)} events → /tmp/serve_trace.json")

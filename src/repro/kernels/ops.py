@@ -39,9 +39,37 @@ __all__ = [
     "pack_int4_weights",
     "infer_int4_scales",
     "paged_attention",
+    "dispatch_counts",
+    "reset_dispatch_counts",
 ]
 
 _STATE = {"enabled": True}
+
+# -- dispatch telemetry -------------------------------------------------
+# Per-(entry point, path) call tallies, kept as plain module state so the
+# kernels layer stays free of any serve/telemetry import; the engine
+# mirrors them into its MetricsRegistry at snapshot time as
+# `kernels.dispatch.<entry>.<kernels|ref>` counters. These count
+# *Python-level* calls: entry points are usually invoked inside a jit
+# trace, so a tally ticks once per trace (or once per eager call), and
+# the path tag records which backend that trace baked in — honest
+# per-dispatch wall time lives in the scheduler's trace spans, where the
+# caller can block_until_ready around a whole fused dispatch.
+_DISPATCH: dict[tuple[str, str], int] = {}
+
+
+def _record_dispatch(entry: str):
+    key = (entry, "kernels" if _STATE["enabled"] else "ref")
+    _DISPATCH[key] = _DISPATCH.get(key, 0) + 1
+
+
+def dispatch_counts() -> dict[tuple[str, str], int]:
+    """Snapshot of the per-entry-point call tallies (copy)."""
+    return dict(_DISPATCH)
+
+
+def reset_dispatch_counts():
+    _DISPATCH.clear()
 
 
 def kernels_enabled() -> bool:
@@ -64,6 +92,7 @@ def _on_tpu() -> bool:
 
 def block_hadamard(x: jnp.ndarray, b: int) -> jnp.ndarray:
     """Online block rotation X·(I ⊗ H_b); Pallas on TPU, interpret elsewhere."""
+    _record_dispatch("block_hadamard")
     if not kernels_enabled():
         return _ref.block_hadamard_ref(x, b)
     return _bh_kernel(x, b, interpret=not _on_tpu())
@@ -88,6 +117,7 @@ def _rotate_mm(x: jnp.ndarray, b: int) -> jnp.ndarray:
 
 def hadamard_quant(x: jnp.ndarray, b: int, *, bits: int = 4):
     """Fused rotate+quantize → (codes, scale, zero); x may be [..., D]."""
+    _record_dispatch("hadamard_quant")
     if not kernels_enabled():
         return _ref.quantize_act_int_ref(_rotate_mm(x, b), bits)
     return _hq_kernel(x, b, bits=bits, interpret=not _on_tpu())
@@ -100,6 +130,7 @@ def quantize_act(x: jnp.ndarray, bits: int = 4):
     (identity rotation), so the row min/max walk stays in VMEM; reference
     path is the jnp oracle.
     """
+    _record_dispatch("quantize_act")
     if not kernels_enabled():
         return _ref.quantize_act_int_ref(x, bits)
     return _hq_kernel(x, 1, bits=bits, interpret=not _on_tpu())
@@ -113,6 +144,7 @@ def int4_matmul(act_codes, act_scale, act_zero, w_packed, w_scale,
     [..., 1]; w_packed [K/2, N] uint8 nibbles, w_scale [N] (or [1, N]) per
     output channel. Returns [..., N] float32.
     """
+    _record_dispatch("int4_matmul")
     lead = act_codes.shape[:-1]
     k = act_codes.shape[-1]
     qa = act_codes.reshape(-1, k)
@@ -149,6 +181,7 @@ def paged_attention(q: jnp.ndarray, kv: dict, block_tables: jnp.ndarray,
     Pallas on TPU, interpret elsewhere, the bit-identical jnp page walk
     under `use_kernels(False)`. Returns [B, S, H, Dh] f32.
     """
+    _record_dispatch("paged_attention")
     if not kernels_enabled():
         return _ref.paged_attention_ref(
             q, kv, block_tables, q_positions, seq_lengths,

@@ -14,8 +14,17 @@ scheduler (`--model mamba2-1.3b --reduced --no-quant` serves the Mamba2
 smoke config); encoder/frontend archs are rejected with a capability
 error. `--legacy-scheduler` keeps the old dense-slot `BatchScheduler` for
 comparison (bf16/fake-quant only).
+
+Observability: `--metrics-json PATH` writes the engine's schema-validated
+registry snapshot, `--trace PATH` records request lifecycles and fused
+dispatches as Chrome Trace JSON (open in https://ui.perfetto.dev), and
+`--probe-every K` samples the rotation-quality activation probes on the
+integer path. Every engine run ends with a one-line summary (tokens/s,
+per-token latency quantiles, peak pool utilization, admission wait)
+computed from the same registry snapshot.
 """
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +37,30 @@ from repro.models.transformer import build_model
 from repro.serve.engine import (EngineRequest, SamplingParams, ServeEngine,
                                 as_servable, pages_for)
 from repro.serve.step import BatchScheduler, Request
+from repro.serve.telemetry import (QualityProbes, Tracer, validate_snapshot,
+                                   validate_trace)
+
+
+def _ms(v) -> str:
+    return "n/a" if v is None else f"{v * 1e3:.1f}ms"
+
+
+def summary_line(snap: dict) -> str:
+    """One-line end-of-run summary from a registry snapshot."""
+    c, g, h = snap["counters"], snap["gauges"], snap["histograms"]
+    toks = c["engine.generated_tokens"]
+    wall = h["engine.step.wall_s"]["sum"]
+    lat = h["engine.decode.token_latency_s"]
+    wait = h["engine.admission.wait_s"]
+    out = (f"summary: {toks} tokens in {wall:.2f}s engine time "
+           f"({toks / max(wall, 1e-9):.1f} tok/s) | "
+           f"token latency p50 {_ms(lat['p50'])} p95 {_ms(lat['p95'])} | "
+           f"peak pages {g['engine.pages.peak_in_use']:.0f}"
+           f"/{g['engine.pages.capacity']:.0f}")
+    if "engine.register_slots.peak_in_use" in g:
+        out += (f" | peak slots {g['engine.register_slots.peak_in_use']:.0f}"
+                f"/{g['engine.register_slots.capacity']:.0f}")
+    return out + f" | admission wait p95 {_ms(wait['p95'])}"
 
 
 def main(argv=None):
@@ -56,6 +89,14 @@ def main(argv=None):
                     help="serve the bf16 model instead")
     ap.add_argument("--legacy-scheduler", action="store_true",
                     help="use the dense-slot BatchScheduler (no paging)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the schema-validated engine metrics "
+                    "snapshot as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome Trace Event JSON (Perfetto)")
+    ap.add_argument("--probe-every", type=int, default=0, metavar="K",
+                    help="sample rotation-quality activation probes every "
+                    "K decode dispatches (integer path only; 0 disables)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -82,10 +123,16 @@ def main(argv=None):
                             size=int(rng.integers(3, 9))).tolist()
                for _ in range(args.requests)]
 
+    if args.probe_every and not args.integer_path:
+        raise SystemExit("--probe-every needs --integer-path: the probes "
+                         "read the fused rotate+quantize site")
     if args.legacy_scheduler:
         if args.integer_path:
             raise SystemExit("--legacy-scheduler cannot drive the integer "
                              "path; the paged engine serves it")
+        if args.metrics_json or args.trace:
+            raise SystemExit("--metrics-json/--trace instrument the paged "
+                             "engine; drop --legacy-scheduler")
         if args.top_k > 0 or args.top_p < 1.0:
             raise SystemExit("--legacy-scheduler has no top-k/top-p "
                              "support; drop the flags or use the engine")
@@ -122,9 +169,13 @@ def main(argv=None):
                   + [pages_for(len(p) + args.max_new, args.page_size)
                      for p in prompts])
     n_pages = args.slots * per_seq + 1
+    tracer = Tracer() if args.trace else None
+    probes = QualityProbes(every_k=args.probe_every) if args.probe_every \
+        else None
     engine = ServeEngine(adapter, n_pages=n_pages, page_size=args.page_size,
                          max_seqs=args.slots,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         tracer=tracer, quality_probes=probes)
     for rid, prompt in enumerate(prompts):
         engine.submit(EngineRequest(
             rid=rid, prompt=prompt,
@@ -138,6 +189,24 @@ def main(argv=None):
           f"{engine.n_decode_tokens} decode tokens)")
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: {r.prompt} → {r.generated}")
+
+    snap = engine.metrics_snapshot()
+    validate_snapshot(snap)     # never write an off-schema artifact
+    print(summary_line(snap))
+    if probes is not None:
+        imb = snap["histograms"]["quality.l1_imbalance_post"]
+        print(f"quality: post-rotation l1 imbalance p50 {imb['p50']:.3f} "
+              f"over {imb['count']} layer observations "
+              f"({snap['counters']['quality.probe_dispatches']} probed "
+              "dispatches)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=1)
+        print(f"metrics snapshot → {args.metrics_json}")
+    if tracer is not None:
+        validate_trace(tracer.to_dict())
+        tracer.save(args.trace)
+        print(f"trace ({len(tracer.events)} events) → {args.trace}")
 
 
 if __name__ == "__main__":

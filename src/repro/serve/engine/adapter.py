@@ -140,6 +140,10 @@ class ServableModel(Protocol):
 
 class _AdapterBase:
     name: str
+    # quality probes (serve.telemetry.quality) are instrumented on the
+    # integer path; adapters that cannot run them advertise it so the
+    # engine rejects a probed configuration at construction, not mid-run
+    supports_quality_probes: bool = False
 
     def __init__(self, cfg, params: Params):
         # capability check: raises for encoder/frontend configs
@@ -193,7 +197,11 @@ class DenseModelAdapter(_AdapterBase):
         return self.model.init_cache(batch, max_len, dtype=self.cache_dtype)
 
     def forward_chunk(self, params, tokens, cache, index, block_table=None,
-                      seq_lengths=None, register_index=None):
+                      seq_lengths=None, register_index=None, *,
+                      probe=False):
+        if probe:
+            raise ValueError("quality probes are instrumented on the "
+                             "integer path only (QuantizedDenseLM)")
         paged = block_table is not None or register_index is not None
         caches = self._merge(cache) if paged else cache
         logits, new = self._forward(params, tokens, caches,
@@ -205,6 +213,8 @@ class DenseModelAdapter(_AdapterBase):
 class IntegerModelAdapter(_AdapterBase):
     """Packed-int4 `QuantizedDenseLM` (params = packed weights). Dense
     archs only, so its state is pure kv."""
+
+    supports_quality_probes = True
 
     def __init__(self, qlm: QuantizedDenseLM, packed_params: Params):
         super().__init__(qlm.cfg, packed_params)
@@ -220,14 +230,19 @@ class IntegerModelAdapter(_AdapterBase):
         return self.qlm.init_cache(batch, max_len)
 
     def forward_chunk(self, params, tokens, cache, index, block_table=None,
-                      seq_lengths=None, register_index=None):
+                      seq_lengths=None, register_index=None, *,
+                      probe=False):
         if register_index is not None:
             raise ValueError("integer path serves kv-only state")
         paged = block_table is not None
         caches = self._merge(cache) if paged else cache
         # QuantizedDenseLM jits internally (per kernels-enabled state)
-        logits, new = self.qlm.forward_chunk(params, tokens, caches, index,
-                                             block_table, seq_lengths)
+        out = self.qlm.forward_chunk(params, tokens, caches, index,
+                                     block_table, seq_lengths, probe=probe)
+        if probe:
+            logits, new, stats = out
+            return logits, (self._split(new) if paged else new), stats
+        logits, new = out
         return logits, (self._split(new) if paged else new)
 
 

@@ -78,15 +78,27 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, SCRATCH_PAGE, -1))
         self._free_set = set(self._free)
+        # telemetry: high-water mark of pages simultaneously in use (the
+        # utilization headroom number the metrics snapshot reports)
+        self.peak_in_use = 0
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
     @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
     def capacity(self) -> int:
         """Allocatable pages (excludes the scratch page)."""
         return self.n_pages - 1
+
+    def reset_peak(self):
+        """Restart the high-water mark at the current level (measurement
+        window boundary, used by `ServeEngine.reset_metrics`)."""
+        self.peak_in_use = self.in_use
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
@@ -94,6 +106,7 @@ class PageAllocator:
                               f"free {len(self._free)}")
         out = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
         return out
 
     def free(self, pages: list[int]):
@@ -124,20 +137,30 @@ class RegisterAllocator:
                              "(slot 0 is scratch)")
         self.n_slots = n_slots
         self._free = list(range(n_slots - 1, SCRATCH_SLOT, -1))
+        self.peak_in_use = 0
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
     @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
     def capacity(self) -> int:
         """Allocatable slots (excludes the scratch slot)."""
         return self.n_slots - 1
 
+    def reset_peak(self):
+        self.peak_in_use = self.in_use
+
     def alloc(self) -> int:
         if not self._free:
             raise MemoryError("register slots exhausted")
-        return self._free.pop()
+        out = self._free.pop()
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return out
 
     def free(self, slot: int):
         if slot <= SCRATCH_SLOT or slot >= self.n_slots \
@@ -220,6 +243,10 @@ class PagedKVCache:
         self.registers = RegisterAllocator(n_slots) if self.has_register \
             else None
         self.slots: dict[int, int] = {}
+        # telemetry: release-time scrub totals (pages / register slots
+        # zeroed), mirrored into the metrics snapshot as gauges
+        self.pages_scrubbed = 0
+        self.slots_scrubbed = 0
 
     @property
     def pool(self) -> Params:
@@ -268,10 +295,12 @@ class PagedKVCache:
             self.state["kv"] = jax.tree.map(
                 lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)),
                 self.state["kv"])
+            self.pages_scrubbed += len(pages)
         if slot is not None:
             self.state["register"] = jax.tree.map(
                 lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
                 self.state["register"])
+            self.slots_scrubbed += 1
 
     def page_of(self, rid: int, position: int) -> tuple[int, int]:
         """(page id, in-page offset) holding `position` of sequence `rid`."""

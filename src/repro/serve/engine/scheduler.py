@@ -37,17 +37,31 @@ Sampling threads one PRNG key per engine step (split per request batch), so
 pick greedy vs temperature sampling row by row, with optional top-k /
 nucleus (top-p) filtering fused into the same `_sample_tokens` dispatch and
 per-request stop sequences cutting generation short.
+
+Telemetry: every engine counter lives in a `serve.telemetry`
+`MetricsRegistry` (`self.metrics`; the old plain-int attributes survive
+as read-only views), exported via `metrics_snapshot()` and reset along a
+measurement-window boundary by `reset_metrics()`. An optional `Tracer`
+records request-lifecycle spans and per-fused-dispatch wall times, and
+optional `QualityProbes` sample the rotation-quality stats every K
+decode dispatches through a probe variant of the fused forward. Both are
+off by default and bit-path-neutral: they never change dispatch shapes,
+argument values, or PRNG key consumption (regression-tested).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.serve.telemetry.metrics import MetricsRegistry
+from repro.serve.telemetry.quality import QualityProbes
+from repro.serve.telemetry.trace import PID_REQUESTS, Tracer
 
 from .adapter import ServableModel
 from .pages import PagedKVCache, pages_for
@@ -117,6 +131,8 @@ class EngineRequest:
     # --- engine-internal state ---
     n_cached: int = 0          # KV rows already written for this sequence
     next_token: int | None = None
+    t_submit: float | None = None   # perf_counter at submit (telemetry)
+    t_admit: float | None = None    # perf_counter at admission
 
     @property
     def done(self) -> bool:
@@ -129,7 +145,9 @@ class ServeEngine:
     def __init__(self, adapter: ServableModel, *, n_pages: int,
                  page_size: int = 16, max_seqs: int = 4,
                  prefill_chunk: int = 8, token_budget: int | None = None,
-                 seed: int = 0, record_logits: bool = False):
+                 seed: int = 0, record_logits: bool = False,
+                 tracer: Tracer | None = None,
+                 quality_probes: QualityProbes | None = None):
         self.adapter = adapter
         self.spec = adapter.state_spec
         self.max_seqs = max_seqs
@@ -151,17 +169,24 @@ class ServeEngine:
         # jit cache for the fused phase dispatches, keyed on the kernels
         # flag (mirrors QuantizedDenseLM._jitted)
         self._jit_cache: dict = {}
-        # counters for benchmarks / accounting tests
-        self.n_steps = 0
-        self.n_prefill_tokens = 0
-        self.n_decode_tokens = 0
-        # page-walk accounting (per attention dispatch, per batch row):
-        # `pages_walked` counts what the ragged early-exit actually walks
-        # (ceil(len/page_size) live columns per sequence); `pages_walked_
-        # dense` counts what the pre-flash-decode kernel walked (every
-        # padded batch row × every table column)
-        self.pages_walked = 0
-        self.pages_walked_dense = 0
+        # telemetry: the registry owns every counter the old plain-int
+        # attributes held (read-only property views keep the old names
+        # alive); tracer and quality probes are opt-in and bit-path-
+        # neutral. Page-walk accounting semantics are unchanged:
+        # `engine.pages_walked` counts what the ragged early-exit
+        # actually walks (ceil(len/page_size) live columns per sequence),
+        # `engine.pages_walked_dense` what the pre-flash-decode kernel
+        # walked (every padded batch row × every table column).
+        self.metrics = MetricsRegistry()
+        self.tracer = tracer
+        self.quality_probes = quality_probes
+        if quality_probes is not None:
+            if not getattr(adapter, "supports_quality_probes", False):
+                raise ValueError(
+                    f"adapter {adapter.name!r} does not support quality "
+                    "probes (integer path only)")
+            quality_probes.bind(self.metrics)
+        self._register_metrics()
 
     # ------------------------------------------------------------------
     # bookkeeping
@@ -192,7 +217,14 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid} needs {need} pages; pool capacity is "
                 f"{self.kv.allocator.capacity}")
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
+        self.metrics.counter("engine.requests.submitted").inc()
+        if self.tracer:
+            self.tracer.begin("request", pid=PID_REQUESTS, tid=req.rid,
+                              args={"prompt_tokens": len(req.prompt),
+                                    "max_new": req.sampling.max_new})
+            self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
 
     def _pages_needed(self, req: EngineRequest) -> int:
         """Worst-case KV pages this request reserves at admission (0 for
@@ -208,15 +240,39 @@ class ServeEngine:
             need = self._pages_needed(req)
             if sum(self._committed.values()) + need \
                     > self.kv.allocator.capacity:
+                self.metrics.counter("engine.admission.blocked").inc()
                 return           # head-of-line blocks until pages free up
             self.queue.pop(0)
             self.kv.open(req.rid)     # before committing: if this raises,
             self._committed[req.rid] = need   # no reservation leaks
             self.prefilling.append(req)
+            req.t_admit = time.perf_counter()
+            self.metrics.counter("engine.requests.admitted").inc()
+            self.metrics.histogram("engine.admission.wait_s").observe(
+                max(req.t_admit - req.t_submit, 0.0))
+            if self.tracer:
+                self.tracer.end("queued", pid=PID_REQUESTS, tid=req.rid)
+                self.tracer.begin("prefill", pid=PID_REQUESTS, tid=req.rid)
+                if self.spec.register:
+                    self.tracer.instant(
+                        "alloc_slot", pid=PID_REQUESTS, tid=req.rid,
+                        args={"slot": self.kv.slots[req.rid]})
 
     def _finish(self, req: EngineRequest):
         self.kv.release(req.rid)
         del self._committed[req.rid]
+        m = self.metrics
+        m.counter("engine.requests.finished").inc()
+        if req.stop_hit:
+            m.counter("engine.requests.stop_hits").inc()
+        if req.t_submit is not None:
+            m.histogram("engine.request.e2e_s").observe(
+                max(time.perf_counter() - req.t_submit, 0.0))
+        if self.tracer:
+            self.tracer.end("decode", pid=PID_REQUESTS, tid=req.rid)
+            self.tracer.end("request", pid=PID_REQUESTS, tid=req.rid,
+                            args={"generated": len(req.generated),
+                                  "stop_hit": req.stop_hit})
 
     def _fused(self, name: str, impl, variant=None):
         """One fused device dispatch per phase: forward (page writes +
@@ -242,6 +298,115 @@ class ServeEngine:
         return fn
 
     # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def _register_metrics(self):
+        """Pre-create every engine instrument so a snapshot is schema-
+        complete (`serve.telemetry.schema`) even before any traffic."""
+        m = self.metrics
+        for name in ("engine.steps", "engine.prefill_tokens",
+                     "engine.decode_tokens", "engine.generated_tokens",
+                     "engine.pages_walked", "engine.pages_walked_dense",
+                     "engine.requests.submitted", "engine.requests.admitted",
+                     "engine.requests.finished", "engine.requests.stop_hits",
+                     "engine.admission.blocked"):
+            m.counter(name)
+        for name in ("engine.step.wall_s", "engine.step.budget_utilization",
+                     "engine.decode.batch_occupancy",
+                     "engine.decode.token_latency_s",
+                     "engine.admission.wait_s", "engine.request.e2e_s",
+                     "engine.prefill.chunk_tokens"):
+            m.histogram(name)
+        self._update_gauges()
+
+    def _update_gauges(self):
+        """Refresh the level gauges from the live bookkeeping."""
+        m = self.metrics
+        alloc = self.kv.allocator
+        m.gauge("engine.pages.capacity").set(alloc.capacity)
+        m.gauge("engine.pages.in_use").set(alloc.in_use)
+        m.gauge("engine.pages.peak_in_use").set(alloc.peak_in_use)
+        m.gauge("engine.pages.reserved").set(sum(self._committed.values()))
+        m.gauge("engine.pages.scrubbed").set(self.kv.pages_scrubbed)
+        m.gauge("engine.queue.depth").set(len(self.queue))
+        m.gauge("engine.batch.decoding").set(len(self.decoding))
+        m.gauge("engine.batch.prefilling").set(len(self.prefilling))
+        regs = self.kv.registers
+        if regs is not None:
+            m.gauge("engine.register_slots.capacity").set(regs.capacity)
+            m.gauge("engine.register_slots.in_use").set(regs.in_use)
+            m.gauge("engine.register_slots.peak_in_use").set(
+                regs.peak_in_use)
+            m.gauge("engine.register_slots.scrubbed").set(
+                self.kv.slots_scrubbed)
+
+    def metrics_snapshot(self) -> dict:
+        """Schema-versioned registry export (the shape
+        `serve.telemetry.schema.validate_snapshot` checks): refresh the
+        level gauges, mirror the kernel layer's per-entry-point dispatch
+        tallies, and snapshot."""
+        self._update_gauges()
+        for (entry, path), n in kops.dispatch_counts().items():
+            c = self.metrics.counter(f"kernels.dispatch.{entry}.{path}")
+            if n > c.value:
+                c.value = n   # mirror of an external monotonic count
+        return self.metrics.snapshot()
+
+    def reset_metrics(self):
+        """Start a fresh measurement window: zero the registry in place
+        (names and held instrument references survive), restart the
+        allocator high-water marks and scrub totals, and clear the
+        kernel dispatch tallies and the probe sampling phase. Engine
+        *state* (queues, caches, PRNG key) is untouched — this is the
+        boundary the benches put between warm-up and the timed run."""
+        self.metrics.reset()
+        self.kv.allocator.reset_peak()
+        if self.kv.registers is not None:
+            self.kv.registers.reset_peak()
+        self.kv.pages_scrubbed = 0
+        self.kv.slots_scrubbed = 0
+        kops.reset_dispatch_counts()
+        if self.quality_probes is not None:
+            self.quality_probes.reset()
+        self._update_gauges()
+
+    def _ensure(self, rid: int, n_tokens: int):
+        """`kv.ensure` plus an instant trace event when the growth
+        actually allocated pages."""
+        if self.tracer is None:
+            self.kv.ensure(rid, n_tokens)
+            return
+        before = self.kv.allocator.n_free
+        self.kv.ensure(rid, n_tokens)
+        got = before - self.kv.allocator.n_free
+        if got:
+            self.tracer.instant("alloc_pages", pid=PID_REQUESTS, tid=rid,
+                                args={"pages": got})
+
+    # -- back-compat counter views (the registry owns the numbers) -----
+
+    @property
+    def n_steps(self) -> int:
+        return self.metrics.counter("engine.steps").value
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return self.metrics.counter("engine.prefill_tokens").value
+
+    @property
+    def n_decode_tokens(self) -> int:
+        return self.metrics.counter("engine.decode_tokens").value
+
+    @property
+    def pages_walked(self) -> int:
+        return self.metrics.counter("engine.pages_walked").value
+
+    @property
+    def pages_walked_dense(self) -> int:
+        return self.metrics.counter("engine.pages_walked_dense").value
+
+    # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
 
@@ -259,35 +424,46 @@ class ServeEngine:
                    for r in batch)
 
     def _decode_impl(self, state, params, key, bt, reg, tokens, fill, lens,
-                     temps, top_ks, top_ps, *, filtered):
+                     temps, top_ks, top_ps, *, filtered, probe=False):
         # block-table-native: the forward writes each new KV row into its
         # page and attends by walking `bt` — no gathered slab exists.
         # `lens` are the true per-slot context lengths (0 for padded
         # rows): the kernel's ragged early-exit walks only each
         # sequence's live pages instead of every table column. `reg` is
         # each row's register slot (scratch for padded rows) for models
-        # whose spec carries fixed-size state.
-        logits, state = self.adapter.forward_chunk(params, tokens, state,
-                                                   fill, bt, lens, reg)
+        # whose spec carries fixed-size state. The probe variant (its own
+        # compiled executable via the jit-cache variant key) additionally
+        # returns the barrier-isolated per-layer quality stats — same
+        # dispatch shapes, same PRNG key consumption.
+        if probe:
+            logits, state, stats = self.adapter.forward_chunk(
+                params, tokens, state, fill, bt, lens, reg, probe=True)
+        else:
+            logits, state = self.adapter.forward_chunk(params, tokens, state,
+                                                       fill, bt, lens, reg)
         key, sub = jax.random.split(key)
         lg = logits[:, 0].astype(jnp.float32)
-        return state, key, lg, _sample_tokens(sub, lg, temps, top_ks, top_ps,
-                                              filtered=filtered)
+        toks = _sample_tokens(sub, lg, temps, top_ks, top_ps,
+                              filtered=filtered)
+        if probe:
+            return state, key, lg, toks, stats
+        return state, key, lg, toks
 
     def _decode_once(self) -> list[EngineRequest]:
         batch = self.decoding
         b = self.max_seqs
+        m = self.metrics
         rids = [r.rid for r in batch] + [None] * (b - len(batch))
         new_lens = [r.n_cached + 1 for r in batch]
         if self.spec.kv:
             for req in batch:
-                self.kv.ensure(req.rid, req.n_cached + 1)
+                self._ensure(req.rid, req.n_cached + 1)
             n_cols = _next_pow2(max(
                 pages_for(r.n_cached + 1, self.kv.page_size) for r in batch))
             bt = self.kv.block_table_array(rids, n_cols)
-            self.pages_walked += sum(pages_for(n, self.kv.page_size)
-                                     for n in new_lens)
-            self.pages_walked_dense += b * n_cols
+            m.counter("engine.pages_walked").inc(
+                sum(pages_for(n, self.kv.page_size) for n in new_lens))
+            m.counter("engine.pages_walked_dense").inc(b * n_cols)
         else:
             bt = None
         reg = self.kv.register_index_array(rids) if self.spec.register \
@@ -306,12 +482,29 @@ class ServeEngine:
         top_ps = jnp.asarray([r.sampling.top_p for r in batch]
                              + [1.0] * (b - len(batch)), jnp.float32)
         filtered = self._wants_filtering(batch)
-        self.kv.state, self._key, logits, toks = self._fused(
+        probe = (self.quality_probes is not None
+                 and self.quality_probes.should_probe())
+        m.histogram("engine.decode.batch_occupancy").observe(
+            len(batch) / self.max_seqs)
+        tr = self.tracer
+        ts0 = tr.ts() if tr else 0.0
+        out = self._fused(
             "decode",
-            functools.partial(self._decode_impl, filtered=filtered),
-            variant=filtered)(
+            functools.partial(self._decode_impl, filtered=filtered,
+                              probe=probe),
+            variant=(filtered, probe))(
             self.kv.state, self.adapter.params, self._key, bt, reg, tokens,
             fill, lens, temps, top_ks, top_ps)
+        if probe:
+            self.kv.state, self._key, logits, toks, stats = out
+        else:
+            (self.kv.state, self._key, logits, toks), stats = out, None
+        if tr:
+            jax.block_until_ready((self.kv.state, toks))
+            tr.complete("dispatch.decode", ts0, tr.ts() - ts0,
+                        args={"rows": len(batch), "probe": probe})
+        if stats is not None:
+            self.quality_probes.record(stats)
         toks = np.asarray(toks)
         finished = []
         for i, req in enumerate(list(batch)):
@@ -320,7 +513,8 @@ class ServeEngine:
             req.next_token = int(toks[i])
             if self.record_logits:
                 req.step_logits.append(np.asarray(logits[i], np.float32))
-            self.n_decode_tokens += 1
+            m.counter("engine.decode_tokens").inc()
+            m.counter("engine.generated_tokens").inc()
             self._check_stop(req)
             if req.done:
                 self.decoding.remove(req)
@@ -360,14 +554,16 @@ class ServeEngine:
         tokens; returns (tokens consumed, requests finished)."""
         req = self.prefilling[0]
         start = req.n_cached
+        m = self.metrics
         real = min(self.prefill_chunk, budget, len(req.prompt) - start)
         padded = _next_pow2(real)
         if self.spec.kv:
-            self.kv.ensure(req.rid, start + real)
+            self._ensure(req.rid, start + real)
             n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
             bt = self.kv.block_table_array([req.rid], n_cols)
-            self.pages_walked += pages_for(start + real, self.kv.page_size)
-            self.pages_walked_dense += n_cols
+            m.counter("engine.pages_walked").inc(
+                pages_for(start + real, self.kv.page_size))
+            m.counter("engine.pages_walked_dense").inc(n_cols)
         else:
             bt = None
         reg = self.kv.register_index_array([req.rid]) if self.spec.register \
@@ -378,6 +574,8 @@ class ServeEngine:
         # `last` (= real - 1) rides along as a traced scalar
         chunk = req.prompt[start:start + real] + [0] * (padded - real)
         filtered = self._wants_filtering([req])
+        tr = self.tracer
+        ts0 = tr.ts() if tr else 0.0
         self.kv.state, self._key, last, tok = self._fused(
             "prefill",
             functools.partial(self._prefill_impl, filtered=filtered),
@@ -389,9 +587,15 @@ class ServeEngine:
             jnp.asarray([req.sampling.temperature], jnp.float32),
             jnp.asarray([req.sampling.top_k], jnp.int32),
             jnp.asarray([req.sampling.top_p], jnp.float32))
+        if tr:
+            jax.block_until_ready((self.kv.state, tok))
+            tr.complete("dispatch.prefill", ts0, tr.ts() - ts0,
+                        args={"rid": req.rid, "tokens": real,
+                              "padded": padded})
 
         req.n_cached = start + real
-        self.n_prefill_tokens += real
+        m.counter("engine.prefill_tokens").inc(real)
+        m.histogram("engine.prefill.chunk_tokens").observe(real)
         finished = []
         if req.n_cached == len(req.prompt):
             # prompt fully cached: the fused call already sampled the
@@ -401,6 +605,10 @@ class ServeEngine:
             req.next_token = int(tok)
             if self.record_logits:
                 req.step_logits.append(np.asarray(last, np.float32))
+            m.counter("engine.generated_tokens").inc()
+            if tr:
+                tr.end("prefill", pid=PID_REQUESTS, tid=req.rid)
+                tr.begin("decode", pid=PID_REQUESTS, tid=req.rid)
             self._check_stop(req)
             if req.done:
                 self._finish(req)
@@ -415,17 +623,34 @@ class ServeEngine:
 
     def step(self) -> list[EngineRequest]:
         """One engine iteration; returns requests that completed."""
+        m = self.metrics
+        t0 = time.perf_counter()
+        gen0 = m.counter("engine.generated_tokens").value
         self._admit()
         finished = []
         budget = self.token_budget
+        spent = 0
         if self.decoding:
             budget -= len(self.decoding)
+            spent += len(self.decoding)
             finished.extend(self._decode_once())
         while budget > 0 and self.prefilling:
             used, fin = self._prefill_once(budget)
             budget -= used
+            spent += used
             finished.extend(fin)
-        self.n_steps += 1
+        m.counter("engine.steps").inc()
+        wall = time.perf_counter() - t0
+        m.histogram("engine.step.wall_s").observe(wall)
+        m.histogram("engine.step.budget_utilization").observe(
+            spent / self.token_budget)
+        # each token generated this step inherits the step's wall time
+        # (np.asarray on the sampled tokens already forced the device
+        # sync, so the wall is real even without tracing)
+        lat = m.histogram("engine.decode.token_latency_s")
+        for _ in range(m.counter("engine.generated_tokens").value - gen0):
+            lat.observe(wall)
+        self._update_gauges()
         return finished
 
     def run(self) -> list[EngineRequest]:

@@ -31,6 +31,15 @@ caches) are scattered straight into their pool pages and attention walks
 the table through `ops.paged_attention`, which dequantizes and re-rotates
 K inside the kernel — the same arithmetic as the dense read path, minus
 the slab.
+
+`forward_chunk(..., probe=True)` compiles a probe variant that
+additionally returns per-layer rotation-quality stats from the fused
+rotate+quantize site (the R̃₃ → W_down path): blockwise ℓ1 mass
+imbalance before/after the online rotation, int4 code saturation rate,
+and pre/post-rotation kurtosis (`serve.telemetry.quality`). The probe
+math reads barrier-isolated copies of the main path's values, so the
+serving arithmetic — and hence every sampled token — is bit-identical
+with probes on or off; the engine samples it every K decode dispatches.
 """
 from __future__ import annotations
 
@@ -44,6 +53,7 @@ from repro.distributed.context import shard_act
 from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.config import ArchConfig
+from repro.serve.telemetry.quality import activation_probe_stats
 
 Params = dict[str, Any]
 
@@ -92,10 +102,12 @@ def _int_linear(x: jnp.ndarray, packed: Params, *, bits: int = 4):
 
 def _rot_int_linear(h: jnp.ndarray, packed: Params, block_size: int):
     """Online block rotation fused with quantization, then integer GEMM
-    (the R̃₃ → Q_A → W_down path of Figure 7)."""
+    (the R̃₃ → Q_A → W_down path of Figure 7). Also returns the activation
+    codes so the quality probes can read the saturation the main path
+    actually dispatched."""
     codes, s, z = kops.hadamard_quant(h, block_size, bits=4)
     y = kops.int4_matmul(codes, s, z, packed["packed"], packed["scale"])
-    return y.astype(h.dtype)
+    return y.astype(h.dtype), codes
 
 
 class QuantizedDenseLM:
@@ -230,7 +242,7 @@ class QuantizedDenseLM:
             dq(cache["v"], cache["v_scale"], cache["v_zero"])
 
     def _block(self, x, blk, cache, index, block_table=None,
-               seq_lengths=None):
+               seq_lengths=None, probe=False):
         cfg = self.cfg
         spec = self.attn_spec
         b, s, d = x.shape
@@ -300,11 +312,25 @@ class QuantizedDenseLM:
         else:
             hid = jax.nn.gelu(_int_linear(hx, blk["ffn"]["w_up"]))
         hid = shard_act(hid, ("batch", "seq", "mlp"))
-        x = x + _rot_int_linear(hid, blk["ffn"]["w_down"], self.block_size)
-        return x, new_cache
+        down, act_codes = _rot_int_linear(hid, blk["ffn"]["w_down"],
+                                          self.block_size)
+        x = x + down
+        stats = None
+        if probe:
+            # rotation-quality probe on the paper's fused rotate+quantize
+            # site: barrier-isolated reads of the main path's values (the
+            # rotated activation is recomputed from a barriered copy — the
+            # fused kernel never materializes it), so the probe cannot
+            # perturb serving arithmetic
+            hid_p = jax.lax.optimization_barrier(hid.astype(jnp.float32))
+            post = kops.block_hadamard(hid_p, self.block_size)
+            stats = activation_probe_stats(hid_p, post, act_codes, bits=4,
+                                           block_size=self.block_size)
+        return x, new_cache, stats
 
     def _forward(self, params: Params, tokens: jnp.ndarray, cache: Params,
-                 index: jnp.ndarray, block_table=None, seq_lengths=None):
+                 index: jnp.ndarray, block_table=None, seq_lengths=None,
+                 probe=False):
         cfg = self.cfg
         cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
         x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
@@ -312,19 +338,27 @@ class QuantizedDenseLM:
 
         def body(carry, inp):
             blk, c = inp
-            return self._block(carry, blk, c, index, block_table,
-                               seq_lengths)
+            x2, nc, stats = self._block(carry, blk, c, index, block_table,
+                                        seq_lengths, probe)
+            return x2, ((nc, stats) if probe else nc)
 
-        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x, ys = jax.lax.scan(body, x, (params["layers"], cache))
+        new_cache, stats = ys if probe else (ys, None)
         x = L.apply_norm(x, params["final_norm"], cfg.norm)
         logits = x @ params["lm_head"].astype(x.dtype)
+        if probe:
+            # stats: dict of [n_layers] arrays (scan-stacked per-layer
+            # probe scalars)
+            return logits, new_cache, stats
         return logits, new_cache
 
-    def _jitted(self, name, impl):
-        """jit `impl` once per (entry point, kernels-enabled) pair; the
-        flag is re-pinned inside the traced body so retraces (new shapes)
-        keep the path they were requested under."""
-        key = (name, kops.kernels_enabled())
+    def _jitted(self, name, impl, probe=False):
+        """jit `impl` once per (entry point, kernels-enabled, probe)
+        triple; the kernels flag is re-pinned inside the traced body so
+        retraces (new shapes) keep the path they were requested under,
+        and the probe variant is a separate executable whose extra
+        outputs never touch the non-probe path's jit cache."""
+        key = (name, kops.kernels_enabled(), probe)
         fn = self._jit_cache.get(key)
         if fn is None:
             enabled = key[1]
@@ -333,7 +367,7 @@ class QuantizedDenseLM:
                         seq_lengths=None):
                 with kops.use_kernels(enabled):
                     return impl(params, tokens, cache, index, block_table,
-                                seq_lengths)
+                                seq_lengths, probe)
 
             fn = self._jit_cache[key] = jax.jit(wrapped)
         return fn
@@ -341,7 +375,8 @@ class QuantizedDenseLM:
     def forward_chunk(self, params: Params, tokens: jnp.ndarray,
                       cache: Params, index: jnp.ndarray,
                       block_table: jnp.ndarray | None = None,
-                      seq_lengths: jnp.ndarray | None = None):
+                      seq_lengths: jnp.ndarray | None = None, *,
+                      probe: bool = False):
         """Token chunk [B, S] at fill position `index` → per-position
         logits [B, S, V] + updated cache. S == 1 with a [B] vector index
         is a per-slot continuous-batching decode step; S > 1 with a
@@ -349,8 +384,10 @@ class QuantizedDenseLM:
         the chunk, attending to everything already cached). With
         `block_table` [B, P] the cache is the engine's page pool and
         attention runs block-table-native; `seq_lengths` [B] feed the
-        paged kernel's ragged early-exit."""
-        return self._jitted("forward", self._forward)(
+        paged kernel's ragged early-exit. `probe=True` additionally
+        returns per-layer rotation-quality stats (see module docstring);
+        the main outputs are bit-identical either way."""
+        return self._jitted("forward", self._forward, probe)(
             params, tokens, cache, jnp.asarray(index, jnp.int32),
             block_table, seq_lengths)
 

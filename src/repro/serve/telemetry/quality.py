@@ -1,0 +1,130 @@
+"""Rotation-quality probes on served activations (MixQuant §3 quantities).
+
+The paper's central claim is that permutation + block rotation equalizes
+per-block ℓ1 mass, which controls the Prop-3.2 quantization-error bound;
+DFRot's analysis predicts the interesting failure mode — massive
+activations that survive rotation and saturate the int4 grid — shows up
+on *real* traffic, not calibration data. These probes measure exactly
+that, on the serving path, per layer:
+
+* `l1_imbalance_pre` / `l1_imbalance_post` — max/mean blockwise ℓ1 mass
+  of the activation entering the fused rotate+quantize step, before and
+  after the online block-Hadamard rotation (1.0 = perfectly balanced;
+  the rotation should pull this toward 1).
+* `sat_rate` — fraction of int4 activation codes pinned at either end
+  of the asymmetric grid (0 or 2^bits−1): code-point waste / clipping
+  pressure from surviving outliers.
+* `kurtosis_pre` / `kurtosis_post` — excess-free Pearson kurtosis of the
+  same activation (3.0 = Gaussian). Rotations drive activations toward
+  Gaussian; a post-rotation kurtosis well above 3 is the DFRot
+  massive-activation signature.
+
+Bit-path neutrality: `activation_probe_stats` wraps every input in
+`jax.lax.optimization_barrier` before computing, so the probe math is a
+side computation XLA cannot fuse into (and thereby re-round) the serving
+arithmetic — with probes on, greedy tokens stay bit-identical to probes
+off (regression-tested). Overhead stays bounded because the scheduler
+samples: only every `every_k`-th decode dispatch runs the probe variant
+of the forward.
+
+Stats land in the shared `MetricsRegistry` as `quality.<stat>`
+histograms (one observation per layer per probed dispatch) plus
+`quality.layer<NN>.<stat>` gauges holding each layer's latest value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import MetricsRegistry
+
+PROBE_STATS = ("l1_imbalance_pre", "l1_imbalance_post", "sat_rate",
+               "kurtosis_pre", "kurtosis_post")
+
+
+def _block_l1_imbalance(x: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """max/mean of per-block ℓ1 mass, blocks along the channel axis,
+    mass pooled over every token in the chunk — the Theorem-driven
+    balance quantity (1.0 = equalized)."""
+    d = x.shape[-1]
+    mass = jnp.sum(jnp.abs(x).reshape(-1, d // block_size, block_size),
+                   axis=(0, 2))
+    return jnp.max(mass) / jnp.maximum(jnp.mean(mass), 1e-12)
+
+
+def _kurtosis(x: jnp.ndarray) -> jnp.ndarray:
+    """Pearson kurtosis pooled over all elements (3.0 = Gaussian)."""
+    x = x.reshape(-1)
+    mu = jnp.mean(x)
+    var = jnp.maximum(jnp.mean(jnp.square(x - mu)), 1e-24)
+    return jnp.mean(jnp.square(jnp.square(x - mu))) / jnp.square(var)
+
+
+def activation_probe_stats(pre: jnp.ndarray, post: jnp.ndarray,
+                           codes: jnp.ndarray, *, bits: int,
+                           block_size: int) -> dict[str, jnp.ndarray]:
+    """Per-layer probe scalars from one fused rotate+quantize site.
+
+    `pre` is the activation entering the rotation, `post` the rotated
+    activation, `codes` the asymmetric integer codes the main path
+    actually dispatched (range [0, 2^bits−1]). Inputs are barriered so
+    this side computation cannot perturb serving arithmetic.
+    """
+    pre = jax.lax.optimization_barrier(pre.astype(jnp.float32))
+    post = jax.lax.optimization_barrier(post.astype(jnp.float32))
+    codes = jax.lax.optimization_barrier(codes)
+    levels = 2 ** bits - 1
+    return {
+        "l1_imbalance_pre": _block_l1_imbalance(pre, block_size),
+        "l1_imbalance_post": _block_l1_imbalance(post, block_size),
+        "sat_rate": jnp.mean(((codes == 0) | (codes == levels))
+                             .astype(jnp.float32)),
+        "kurtosis_pre": _kurtosis(pre),
+        "kurtosis_post": _kurtosis(post),
+    }
+
+
+class QualityProbes:
+    """Sampling policy + registry sink for the activation probes.
+
+    Construct with the sampling period and hand to
+    `ServeEngine(quality_probes=...)`; the engine binds its registry and
+    asks `should_probe()` once per decode dispatch — every `every_k`-th
+    one (the first included) runs the probe variant of the fused
+    forward, whose per-layer stats arrive at `record()` as host arrays.
+    """
+
+    def __init__(self, every_k: int = 8):
+        if every_k < 1:
+            raise ValueError("every_k must be >= 1")
+        self.every_k = every_k
+        self._registry: MetricsRegistry | None = None
+        self._dispatches = 0
+
+    def bind(self, registry: MetricsRegistry):
+        self._registry = registry
+
+    def reset(self):
+        self._dispatches = 0
+
+    def should_probe(self) -> bool:
+        n = self._dispatches
+        self._dispatches += 1
+        return n % self.every_k == 0
+
+    def record(self, stats: dict[str, "jnp.ndarray"]):
+        """`stats`: name → [n_layers] array (the scan-stacked per-layer
+        scalars). Each layer's value feeds the pooled histogram and its
+        own latest-value gauge."""
+        if self._registry is None:
+            raise RuntimeError("QualityProbes.record before bind()")
+        reg = self._registry
+        reg.counter("quality.probe_dispatches").inc()
+        for name, arr in stats.items():
+            vals = np.asarray(arr, np.float64).reshape(-1)
+            hist = reg.histogram(f"quality.{name}")
+            for layer, v in enumerate(vals):
+                v = float(max(v, 0.0))
+                hist.observe(v)
+                reg.gauge(f"quality.layer{layer:02d}.{name}").set(v)

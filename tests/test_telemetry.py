@@ -1,0 +1,397 @@
+"""Telemetry: metrics primitives, trace well-formedness, schema
+validation, and — the acceptance-critical part — bit-path neutrality:
+turning tracing and quality probes on must not change a single generated
+token or logit on any serving path.
+"""
+import importlib.util
+import json
+import math
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.transformer import build_model
+from repro.serve.engine import (EngineRequest, SamplingParams, ServeEngine,
+                                as_servable)
+from repro.serve.quantized import QuantizedDenseLM, pack_dense_params
+from repro.serve.telemetry import (PROBE_STATS, SCHEMA_VERSION, Histogram,
+                                   MetricsRegistry, QualityProbes, Tracer,
+                                   validate_snapshot, validate_trace)
+from repro.serve.telemetry.metrics import Counter
+
+PROMPTS = [[3, 14, 15, 92, 6], [53, 58, 9], [7, 9, 3, 23, 84, 62]]
+MAX_NEW = 3
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """bf16 + packed-int4 adapters over one tiny dense config (no PTQ:
+    the telemetry tests need the serving paths, not quantizer quality)."""
+    cfg = get_config("llama3-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    packed = pack_dense_params(params, cfg)
+    return cfg, model, params, packed
+
+
+def _run(adapter, *, prompts=PROMPTS, **kw):
+    kw.setdefault("n_pages", 33)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seqs", 2)
+    kw.setdefault("prefill_chunk", 4)
+    eng = ServeEngine(adapter, record_logits=True, **kw)
+    for rid, p in enumerate(prompts):
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == len(prompts)
+    return eng, done
+
+
+# ----------------------------------------------------------------------
+# metrics primitives
+# ----------------------------------------------------------------------
+
+def test_histogram_bucket_boundaries():
+    h = Histogram(base=1e-6, growth=2.0, n_buckets=40)
+    # bucket 0 = [0, base), bucket i = [base·g^(i-1), base·g^i)
+    assert h.bucket_index(0.0) == 0
+    assert h.bucket_index(0.999e-6) == 0
+    assert h.bucket_index(1e-6) == 1          # boundary is inclusive below
+    assert h.bucket_index(1.999e-6) == 1
+    assert h.bucket_index(2e-6) == 2
+    assert h.bucket_index(4e-6) == 3
+    assert h.bucket_index(1e12) == 39         # open-ended last bucket
+    assert h.upper(0) == h.lower(1) == 1e-6
+    assert h.upper(3) == h.lower(4) == 8e-6
+    assert math.isinf(h.upper(39))
+    for i in range(1, 39):                    # boundaries classify exactly
+        assert h.bucket_index(h.lower(i)) == i
+
+
+def _check_quantile_property(h, vals, q):
+    """The estimate must land in the bucket holding the nearest-rank
+    sample (so it is within one growth factor of the exact statistic) and
+    inside the observed [min, max]."""
+    est = h.quantile(q)
+    rank = max(1, math.ceil(q * len(vals)))
+    sample = sorted(vals)[rank - 1]
+    b = h.bucket_index(sample)
+    assert h.lower(b) <= est <= min(h.upper(b), max(vals))
+    assert min(vals) <= est <= max(vals)
+
+
+def test_quantile_within_bucket_of_nearest_rank():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 200))
+        vals = np.exp(rng.normal(-8, 4, size=n)).tolist()  # µs..hours
+        h = Histogram()
+        for v in vals:
+            h.observe(v)
+        for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+            _check_quantile_property(h, vals, q)
+
+
+def test_quantile_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.floats(min_value=0.0, max_value=1e9,
+                                  allow_nan=False), min_size=1,
+                        max_size=100),
+               st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+    @hyp.settings(deadline=None, max_examples=200)
+    def check(vals, q):
+        h = Histogram()
+        for v in vals:
+            h.observe(v)
+        _check_quantile_property(h, vals, q)
+
+    check()
+
+
+def test_histogram_merge_is_exact():
+    a, b, both = Histogram(), Histogram(), Histogram()
+    rng = np.random.default_rng(1)
+    va, vb = rng.exponential(1e-3, 50), rng.exponential(10.0, 70)
+    for v in va:
+        a.observe(v)
+        both.observe(v)
+    for v in vb:
+        b.observe(v)
+        both.observe(v)
+    a.merge(b)
+    assert a.counts == both.counts and a.count == both.count
+    assert a.min == both.min and a.max == both.max
+    assert a.sum == pytest.approx(both.sum)
+    with pytest.raises(ValueError):
+        a.merge(Histogram(base=1e-3))          # config mismatch
+
+
+def test_counter_monotonic_and_registry_reset():
+    reg = MetricsRegistry()
+    c = reg.counter("engine.steps")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    c.inc(3)
+    h = reg.histogram("engine.step.wall_s")
+    h.observe(0.5)
+    reg.reset()
+    # identity survives the reset (hot-loop callers hold the instrument)
+    assert reg.counter("engine.steps") is c and c.value == 0
+    assert h.count == 0 and math.isinf(h.min)
+
+
+def test_registry_merge_multi_host():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("engine.steps").inc(2)
+    b.counter("engine.steps").inc(5)
+    b.gauge("engine.queue.depth").set(7)
+    b.histogram("engine.step.wall_s").observe(1.0)
+    a.merge(b)
+    assert a.counter("engine.steps").value == 7
+    assert a.gauge("engine.queue.depth").value == 7
+    assert a.histogram("engine.step.wall_s").count == 1
+
+
+# ----------------------------------------------------------------------
+# trace well-formedness
+# ----------------------------------------------------------------------
+
+def test_tracer_emits_valid_chrome_trace(tmp_path):
+    tr = Tracer()
+    tr.begin("request", pid=2, tid=1)
+    tr.begin("queued", pid=2, tid=1)
+    tr.end("queued", pid=2, tid=1)
+    tr.instant("alloc_pages", pid=2, tid=1, args={"pages": 2})
+    tr.complete("dispatch.decode", tr.ts(), 12.5)
+    tr.end("request", pid=2, tid=1)
+    n = validate_trace(tr.to_dict())
+    assert n == len(tr.events)
+    path = tmp_path / "t.json"
+    tr.save(str(path))
+    with open(path) as f:
+        obj = json.load(f)                    # round-trips as plain JSON
+    assert validate_trace(obj) == n
+    # ts are µs on one monotonic clock: B before E for every span
+    evs = [e for e in obj["traceEvents"] if e["ph"] in "BE"]
+    assert evs[0]["ts"] <= evs[-1]["ts"]
+
+
+@pytest.mark.parametrize("events,msg", [
+    ([{"name": "a", "ph": "E", "ts": 1.0, "pid": 1, "tid": 0}],
+     "without an open"),
+    ([{"name": "a", "ph": "B", "ts": 1.0, "pid": 1, "tid": 0},
+      {"name": "b", "ph": "E", "ts": 2.0, "pid": 1, "tid": 0}],
+     "must nest"),
+    ([{"name": "a", "ph": "B", "ts": 1.0, "pid": 1, "tid": 0}],
+     "unclosed"),
+    ([{"name": "a", "ph": "X", "ts": 1.0, "dur": -5, "pid": 1, "tid": 0}],
+     "invalid dur"),
+    ([{"name": "a", "ph": "B", "ts": -1.0, "pid": 1, "tid": 0}],
+     "invalid ts"),
+    ([{"ph": "B", "ts": 1.0, "pid": 1, "tid": 0}], "missing 'name'"),
+])
+def test_validate_trace_rejects_malformed(events, msg):
+    with pytest.raises(ValueError, match=msg):
+        validate_trace({"traceEvents": events})
+
+
+# ----------------------------------------------------------------------
+# schema validation
+# ----------------------------------------------------------------------
+
+def test_snapshot_schema_rejects_unknown_and_missing(stack):
+    cfg, model, params, _ = stack
+    eng, _ = _run(as_servable(model, params))
+    snap = eng.metrics_snapshot()
+    validate_snapshot(snap)
+
+    bad = json.loads(json.dumps(snap))
+    bad["counters"]["engine.typo_metric"] = 1
+    with pytest.raises(ValueError, match="unknown counter"):
+        validate_snapshot(bad)
+
+    bad = json.loads(json.dumps(snap))
+    del bad["histograms"]["engine.step.wall_s"]
+    with pytest.raises(ValueError, match="missing histogram"):
+        validate_snapshot(bad)
+
+    bad = json.loads(json.dumps(snap))
+    bad["schema_version"] = SCHEMA_VERSION + 1
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_snapshot(bad)
+
+    bad = json.loads(json.dumps(snap))
+    bad["histograms"]["engine.step.wall_s"]["count"] += 1
+    with pytest.raises(ValueError, match="inconsistent"):
+        validate_snapshot(bad)
+
+
+# ----------------------------------------------------------------------
+# engine integration
+# ----------------------------------------------------------------------
+
+def test_engine_snapshot_and_trace_valid(stack):
+    cfg, model, params, _ = stack
+    tr = Tracer()
+    eng, done = _run(as_servable(model, params), tracer=tr)
+    snap = eng.metrics_snapshot()
+    validate_snapshot(snap)
+    validate_trace(tr.to_dict())
+    c = snap["counters"]
+    assert c["engine.requests.submitted"] == len(PROMPTS)
+    assert c["engine.requests.finished"] == len(PROMPTS)
+    assert c["engine.generated_tokens"] \
+        == sum(len(r.generated) for r in done.values()) \
+        == len(PROMPTS) * MAX_NEW
+    assert c["engine.prefill_tokens"] == sum(len(p) for p in PROMPTS)
+    assert 0 < c["engine.pages_walked"] < c["engine.pages_walked_dense"]
+    # back-compat property views read the same registry counters
+    assert eng.n_steps == c["engine.steps"] > 0
+    assert eng.pages_walked == c["engine.pages_walked"]
+    g = snap["gauges"]
+    assert g["engine.pages.in_use"] == 0           # all released
+    assert g["engine.pages.peak_in_use"] > 0
+    assert g["engine.pages.scrubbed"] > 0
+    h = snap["histograms"]
+    assert h["engine.step.wall_s"]["count"] == c["engine.steps"]
+    assert h["engine.decode.token_latency_s"]["count"] \
+        == c["engine.generated_tokens"]
+    assert h["engine.request.e2e_s"]["count"] == len(PROMPTS)
+    # the kernel dispatch tallies were mirrored in
+    assert any(k.startswith("kernels.dispatch.") for k in c)
+    # every fused dispatch left an "X" event; every request a lifecycle
+    evs = tr.to_dict()["traceEvents"]
+    assert sum(e["ph"] == "X" for e in evs) > 0
+    assert sum(e["ph"] == "B" and e["name"] == "request" for e in evs) \
+        == len(PROMPTS)
+
+
+def test_tracing_is_bit_path_neutral(stack):
+    """Same tokens AND bit-identical recorded logits with tracing on."""
+    cfg, model, params, _ = stack
+    _, plain = _run(as_servable(model, params))
+    _, traced = _run(as_servable(model, params), tracer=Tracer())
+    for rid in plain:
+        assert traced[rid].generated == plain[rid].generated
+        for a, b in zip(traced[rid].step_logits, plain[rid].step_logits):
+            assert np.array_equal(a, b)
+
+
+def test_probes_are_bit_path_neutral_int4(stack):
+    """The probe variant of the fused forward (barrier-isolated side
+    computation) must not perturb the integer path: greedy tokens and
+    logits bit-identical, and the per-layer quality stats land in the
+    registry."""
+    cfg, model, params, packed = stack
+    qlm = QuantizedDenseLM(cfg, block_size=16)
+    _, plain = _run(as_servable(qlm, packed))
+    probes = QualityProbes(every_k=2)
+    eng, probed = _run(as_servable(qlm, packed), quality_probes=probes,
+                       tracer=Tracer())
+    for rid in plain:
+        assert probed[rid].generated == plain[rid].generated
+        for a, b in zip(probed[rid].step_logits, plain[rid].step_logits):
+            assert np.array_equal(a, b)
+    snap = eng.metrics_snapshot()
+    validate_snapshot(snap)
+    n_probed = snap["counters"]["quality.probe_dispatches"]
+    assert n_probed > 0
+    for stat in PROBE_STATS:
+        h = snap["histograms"][f"quality.{stat}"]
+        assert h["count"] == n_probed * cfg.n_layers
+        for layer in range(cfg.n_layers):
+            assert f"quality.layer{layer:02d}.{stat}" in snap["gauges"]
+    # probe physics sanity: imbalance >= 1 by construction, saturation a
+    # rate in [0, 1]
+    assert snap["histograms"]["quality.l1_imbalance_post"]["min"] >= 1.0
+    assert 0.0 <= snap["histograms"]["quality.sat_rate"]["max"] <= 1.0
+
+
+def test_probes_rejected_on_dense_adapter(stack):
+    cfg, model, params, _ = stack
+    with pytest.raises(ValueError, match="quality probes"):
+        ServeEngine(as_servable(model, params), n_pages=33, page_size=8,
+                    quality_probes=QualityProbes())
+
+
+def test_reset_metrics_gives_fresh_window(stack):
+    """A second run() on the same engine must not accumulate counters
+    across runs once reset_metrics() marks the window boundary."""
+    cfg, model, params, _ = stack
+    eng, _ = _run(as_servable(model, params))
+    first = eng.metrics_snapshot()["counters"]
+    eng.reset_metrics()
+    zero = eng.metrics_snapshot()
+    validate_snapshot(zero)                  # still schema-complete
+    assert zero["counters"]["engine.steps"] == 0
+    assert zero["gauges"]["engine.pages.peak_in_use"] == 0
+    for rid, p in enumerate(PROMPTS):
+        eng.submit(EngineRequest(rid=100 + rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)))
+    eng.run()
+    second = eng.metrics_snapshot()["counters"]
+    for name in ("engine.steps", "engine.prefill_tokens",
+                 "engine.decode_tokens", "engine.generated_tokens",
+                 "engine.pages_walked", "engine.requests.finished"):
+        assert second[name] == first[name], name
+
+
+def test_register_slot_gauges_on_ssm(stack):
+    cfg = get_config("mamba2-1.3b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng, _ = _run(as_servable(model, params), prompts=PROMPTS[:1])
+    snap = eng.metrics_snapshot()
+    validate_snapshot(snap)
+    g = snap["gauges"]
+    assert g["engine.register_slots.capacity"] == eng.max_seqs
+    assert g["engine.register_slots.peak_in_use"] == 1
+    assert g["engine.register_slots.scrubbed"] == 1
+
+
+# ----------------------------------------------------------------------
+# bench row schema checks
+# ----------------------------------------------------------------------
+
+def _load_bench(name):
+    root = pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+    sys.path.insert(0, str(root))
+    try:
+        spec = importlib.util.spec_from_file_location(name,
+                                                      root / f"{name}.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return mod
+    finally:
+        sys.path.remove(str(root))
+
+
+def test_kernel_bench_row_schema():
+    kb = _load_bench("kernel_bench")
+    good = {"op": "decode_ref", "decode_step_us": 12}
+    kb._check_schema([good])
+    with pytest.raises(ValueError, match="missing required field"):
+        kb._check_schema([{"op": "decode_ref"}])
+    with pytest.raises(ValueError, match="unknown op family"):
+        kb._check_schema([{"op": "mystery_op", "value": 1}])
+    with pytest.raises(ValueError, match="missing 'op'"):
+        kb._check_schema([{"decode_step_us": 12}])
+    kb._check_schema([{"op": "paged_attention_early_exit", "ctx": 64,
+                       "kv_heads": 2, "q_heads": 4, "kv_splits": 1,
+                       "page_size": 16, "batch": 4, "pages_per_step": 10,
+                       "us_per_step": 1.0}])
+
+
+def test_serve_bench_row_schema():
+    sb = _load_bench("serve_bench")
+    sb._check_schema([{"path": "x", "family": "dense", "tokens_per_s": 1}])
+    with pytest.raises(ValueError, match="missing required field"):
+        sb._check_schema([{"path": "x", "family": "dense"}])
