@@ -56,10 +56,15 @@ def summary_line(snap: dict) -> str:
            f"({toks / max(wall, 1e-9):.1f} tok/s) | "
            f"token latency p50 {_ms(lat['p50'])} p95 {_ms(lat['p95'])} | "
            f"peak pages {g['engine.pages.peak_in_use']:.0f}"
-           f"/{g['engine.pages.capacity']:.0f}")
+           f"/{g['engine.pages.capacity']:.0f} "
+           f"({g['engine.pages.utilization_peak']:.0%} peak util)")
     if "engine.register_slots.peak_in_use" in g:
         out += (f" | peak slots {g['engine.register_slots.peak_in_use']:.0f}"
                 f"/{g['engine.register_slots.capacity']:.0f}")
+    out += (f" | preempt {c['engine.preemptions']} "
+            f"cancel {c['engine.requests.cancelled']} "
+            f"expire {c['engine.requests.expired']} "
+            f"fail {c['engine.requests.failed']}")
     return out + f" | admission wait p95 {_ms(wait['p95'])}"
 
 
@@ -97,6 +102,14 @@ def main(argv=None):
     ap.add_argument("--probe-every", type=int, default=0, metavar="K",
                     help="sample rotation-quality activation probes every "
                     "K decode dispatches (integer path only; 0 disables)")
+    ap.add_argument("--admission", default="optimistic",
+                    choices=["optimistic", "reserve"],
+                    help="admission policy: optimistic (prompt pages + "
+                    "headroom, preemption-backed) or reserve (worst-case "
+                    "pages up front, never preempts)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL in seconds, enforced at step "
+                    "boundaries (expired requests return their pages)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -175,6 +188,9 @@ def main(argv=None):
     engine = ServeEngine(adapter, n_pages=n_pages, page_size=args.page_size,
                          max_seqs=args.slots,
                          prefill_chunk=args.prefill_chunk,
+                         admission=args.admission,
+                         deadline_s=args.deadline_s,
+                         max_context=args.max_len,
                          tracer=tracer, quality_probes=probes)
     for rid, prompt in enumerate(prompts):
         engine.submit(EngineRequest(
@@ -188,7 +204,8 @@ def main(argv=None):
           f"({engine.n_prefill_tokens} prefill + "
           f"{engine.n_decode_tokens} decode tokens)")
     for r in sorted(done, key=lambda r: r.rid):
-        print(f"req {r.rid}: {r.prompt} → {r.generated}")
+        mark = "" if r.outcome in ("length", "stop") else f" [{r.outcome}]"
+        print(f"req {r.rid}: {r.prompt} → {r.generated}{mark}")
 
     snap = engine.metrics_snapshot()
     validate_snapshot(snap)     # never write an off-schema artifact

@@ -11,17 +11,36 @@ scheduler with no architecture branches. The kv data path is
 block-table-native: the pools and block tables flow into each backend's
 `forward_chunk`, which writes new KV rows into their pages and attends by
 walking the table in `kernels.ops.paged_attention` — no gathered slab.
-See each module's docstring for the design.
+
+Admission comes in two policies. `"reserve"` (the default-off safety
+baseline) commits worst-case `pages_for(prompt + max_new)` pages up
+front, so a running sequence can never exhaust the pool — at the cost of
+capping utilization under bursty traffic with pages nobody has written.
+`"optimistic"` (the default) admits when the *prompt's* pages plus a
+small headroom watermark fit, and recovers from mid-decode exhaustion by
+preempting a victim: its pages are scrubbed and released through the
+normal path, and the request replays later by re-prefilling its
+host-known `prompt + generated` stream. Replay reproduces the identical
+continuation — greedy decoding is deterministic, and sampling keys
+derive from `(rid, position)`, never from a global step key — and a
+request preempted past its bound fails terminally instead of
+livelocking. Requests can also be cancelled (`ServeEngine.cancel`) or
+expire against a deadline, and `faults.FaultPlan` injects deterministic
+exhaustion/dispatch/lifecycle chaos for the robustness tests. See each
+module's docstring for the design.
 """
 from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
                       StateSpec, as_servable, derive_state_spec)
+from .faults import DispatchFault, FaultPlan
 from .pages import (PageAllocator, PagedKVCache, RegisterAllocator,
                     pages_for)
-from .scheduler import EngineRequest, SamplingParams, ServeEngine
+from .scheduler import (EngineRequest, EngineStalledError, SamplingParams,
+                        ServeEngine)
 
 __all__ = [
     "ServableModel", "StateSpec", "derive_state_spec", "DenseModelAdapter",
     "IntegerModelAdapter", "as_servable", "PageAllocator",
     "RegisterAllocator", "PagedKVCache", "pages_for", "EngineRequest",
-    "SamplingParams", "ServeEngine",
+    "EngineStalledError", "SamplingParams", "ServeEngine", "FaultPlan",
+    "DispatchFault",
 ]

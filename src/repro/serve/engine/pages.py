@@ -38,7 +38,13 @@ This module keeps the *bookkeeping*: the two allocators, block tables and
 register-slot maps, and release-time scrubbing (a freed register slot is
 zeroed before reuse — unlike KV rows, register state is read in full at
 the next admission, so stale state would leak across requests; freed KV
-pages are zeroed through the same method for defence in depth). The
+pages are zeroed through the same method for defence in depth). The same
+`release()`/`scrub()` path serves normal completion, cancellation, and
+preemption — a preempted victim's pages return here and its state is
+recomputed later by replaying the host-known token stream, so the
+allocator never needs a swap-out notion. `alloc()` validates before
+mutating: `MemoryError` on exhaustion leaves the free list untouched,
+which is what lets the scheduler preempt a victim and simply retry. The
 legacy `gather_pages` / `scatter_*_rows` primitives survive purely as the
 test oracle the paged kernel is checked against.
 

@@ -2,51 +2,65 @@
 
 Scheduling model (one `step()` = one engine iteration):
 
-  1. **Admission** — requests are admitted whenever a sequence slot is free
-     and the page allocator can cover the request's worst case
-     (`pages_for(prompt + max_new)` KV pages when the model's state spec
-     has a kv part, plus one register slot when it has a register part);
-     reservation-based admission means a running sequence can never hit an
-     out-of-pages fault mid-decode. Register slots are sized to `max_seqs`,
-     so a free sequence slot implies a free register slot.
-  2. **Decode** — every generating sequence advances one token in a single
-     batched `forward_chunk` call with per-slot fill positions (vector
-     cache index), its block-table rows, and its register slot index. The
-     batch is padded to `max_seqs` rows pointing at the scratch page/slot,
-     so batch shape — and hence the jit cache — is fixed.
-  3. **Chunked prefill** — whatever remains of the per-step token budget
-     goes to prompt processing, `prefill_chunk` tokens at a time through
-     the same `forward_chunk` entry (causal within the chunk, scalar fill
-     index), instead of the legacy one-token-per-step prompt drip. Chunks
-     are padded to the next power of two so prefill shapes stay bounded;
-     `seq_lengths` carries each row's true extent so SSM state carried
-     across chunks ignores the padded tail.
+  1. **Lifecycle sweep** — injected faults (cancel/expiry chaos from an
+     attached `FaultPlan`) and per-request deadlines are applied at the
+     step boundary: a cancelled or expired request leaves whatever phase
+     it is in with its pages and register slot scrubbed and returned.
+  2. **Admission** — two policies, selected at construction:
 
-The scheduler itself never branches on architecture: it reads the
-adapter's `StateSpec` to know which index kinds to build. Dense/MoE runs
-are pure kv (block tables only), pure SSMs are pure register (no tables,
-no page walk), hybrids pass both. The kv phases stay block-table-native:
-the state and block tables go straight into `forward_chunk`, which writes
-each new KV row into its page and walks the table inside the
-paged-attention kernel — the scheduler never materialises a gathered slab
-(`pages.gather_pages` / `pages.scatter_*_rows` survive only as the test
-oracle).
+     * `"optimistic"` (default): admit when the pages for the request's
+       *prompt* plus a small headroom watermark fit next to the pages
+       already committed. Utilization under bursty traffic is bounded by
+       real demand, not by worst-case reservations — the trade is that
+       the pool can genuinely exhaust mid-decode, which preemption
+       (below) recovers from.
+     * `"reserve"`: the safety baseline — admit only when
+       `pages_for(prompt + max_new)` worst-case pages fit, so a running
+       sequence can never hit an out-of-pages fault. Utilization caps
+       exactly when traffic is heaviest (the pool fills with pages
+       nobody has written yet).
 
-Sampling threads one PRNG key per engine step (split per request batch), so
-`temperature > 0` is genuinely stochastic — per-request `SamplingParams`
-pick greedy vs temperature sampling row by row, with optional top-k /
-nucleus (top-p) filtering fused into the same `_sample_tokens` dispatch and
-per-request stop sequences cutting generation short.
+     Committed pages are tracked as a running total (`_committed_total`,
+     updated at admit/growth/finish/preempt/cancel), so admission is
+     O(queue), not O(queue · active). Backoff-waiting replays are
+     skipped; otherwise admission blocks head-of-line for fairness.
+  3. **Decode** — every generating sequence advances one token in a
+     single batched `forward_chunk` call with per-slot fill positions,
+     block-table rows, and register slot indices, padded to `max_seqs`
+     rows so the jit cache shape is fixed. Before the dispatch, page
+     growth runs under the preemption guard (below).
+  4. **Chunked prefill** — the rest of the per-step token budget goes to
+     the head-of-line prompt, `prefill_chunk` tokens at a time, chunks
+     padded to the next power of two. A *replay* (preempted request)
+     prefills `prompt + generated` through exactly the same path.
+
+**Preemption / replay contract.** When page growth would exhaust the
+allocator (really, or via an injected fault), the scheduler preempts a
+victim — the active page-holding request with the fewest generated
+tokens, latest-admitted breaking ties — releasing its pages and slot
+through the same scrub path `release()` uses, and re-queues it at the
+front with exponential step backoff. Replay recomputes the victim by
+prefilling `prompt + generated` (all host-known — no swap traffic) and
+must reproduce the *identical* continuation: greedy decoding is
+deterministic, and sampling keys are derived per `(rid, position)` from
+the engine seed (`_row_keys`), never from a global step key, so a
+replayed sampled continuation is bit-identical no matter how the
+interleaving changed. A request preempted more than `max_preemptions`
+times fails terminally (`failed="preempted..."`) instead of livelocking.
+
+**Stall detection.** If nothing is active and an admission-eligible
+request still cannot be admitted, no future step can make progress; the
+scheduler raises `EngineStalledError` naming who is blocked and on how
+many pages instead of spinning forever. Optimistic `submit()` rejects
+up front prompts whose pages can never fit beside the headroom.
 
 Telemetry: every engine counter lives in a `serve.telemetry`
-`MetricsRegistry` (`self.metrics`; the old plain-int attributes survive
-as read-only views), exported via `metrics_snapshot()` and reset along a
-measurement-window boundary by `reset_metrics()`. An optional `Tracer`
-records request-lifecycle spans and per-fused-dispatch wall times, and
-optional `QualityProbes` sample the rotation-quality stats every K
-decode dispatches through a probe variant of the fused forward. Both are
-off by default and bit-path-neutral: they never change dispatch shapes,
-argument values, or PRNG key consumption (regression-tested).
+`MetricsRegistry` (`self.metrics`), including the robustness families —
+`engine.preemptions`, `engine.requests.cancelled/expired/failed`,
+`engine.replayed_prefill_tokens`, `engine.dispatch.faults`, and the
+live/peak page-utilization gauges. An optional `Tracer` records request
+lifecycles and per-dispatch wall times, and optional `QualityProbes`
+sample rotation-quality stats; both stay bit-path-neutral.
 """
 from __future__ import annotations
 
@@ -64,7 +78,14 @@ from repro.serve.telemetry.quality import QualityProbes
 from repro.serve.telemetry.trace import PID_REQUESTS, Tracer
 
 from .adapter import ServableModel
+from .faults import DispatchFault, FaultPlan
 from .pages import PagedKVCache, pages_for
+
+
+class EngineStalledError(RuntimeError):
+    """Admission can never proceed: nothing is active and an eligible
+    queued request still does not fit. Raised with a per-request
+    diagnosis instead of letting `run()` spin forever."""
 
 
 def _next_pow2(n: int) -> int:
@@ -74,15 +95,28 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _row_keys(base, rids, positions):
+    """Replay-stable sampling keys: one PRNG key per batch row, derived
+    from the `(rid, position)` pair — never from a global step key — so
+    the token sampled at a given position of a given request is the same
+    no matter which step, batch slot, or replay attempt produces it."""
+    def one(r, p):
+        return jax.random.fold_in(jax.random.fold_in(base, r), p)
+
+    return jax.vmap(one)(rids, positions)
+
+
 @functools.partial(jax.jit, static_argnames=("filtered",))
-def _sample_tokens(key, logits, temps, top_ks, top_ps, *, filtered=True):
+def _sample_tokens(keys, logits, temps, top_ks, top_ps, *, filtered=True):
     """One fused device call: greedy rows where temp == 0; elsewhere
     categorical over logits/temp restricted to the top-k tokens (k == 0
     disables) and then the nucleus — the smallest set whose probability
-    mass reaches top_p (top_p >= 1 disables). `filtered=False` (static —
-    the scheduler knows host-side when every row has filtering off) skips
-    the two full-vocab sorts so pure-greedy/temperature batches keep
-    their pre-top-k/p cost."""
+    mass reaches top_p (top_p >= 1 disables). Each row samples with its
+    own `(rid, position)`-derived key (`keys` [B]), so stochastic rows
+    are replay-stable. `filtered=False` (static — the scheduler knows
+    host-side when every row has filtering off) skips the two full-vocab
+    sorts so pure-greedy/temperature batches keep their pre-top-k/p
+    cost."""
     v = logits.shape[-1]
     greedy = jnp.argmax(logits, axis=-1)
     scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
@@ -101,7 +135,8 @@ def _sample_tokens(key, logits, temps, top_ks, top_ps, *, filtered=True):
             | (top_ps >= 1.0)[:, None]
         thresh = jnp.min(jnp.where(keep_sorted, sp, jnp.inf), axis=-1)
         scaled = jnp.where(probs >= thresh[:, None], scaled, -jnp.inf)
-    sampled = jax.random.categorical(key, scaled, axis=-1)
+    sampled = jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg))(keys, scaled)
     return jnp.where(temps > 0, sampled, greedy)
 
 
@@ -124,19 +159,45 @@ class EngineRequest:
     prompt: list[int]
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    deadline_s: float | None = None  # TTL from submit, step-boundary checked
     generated: list[int] = dataclasses.field(default_factory=list)
     # per generated token: float32 logits row (only when record_logits)
     step_logits: list[np.ndarray] = dataclasses.field(default_factory=list)
     stop_hit: bool = False     # a stop sequence ended generation early
+    # --- terminal lifecycle outcomes (at most one is ever set) ---
+    cancelled: bool = False    # cancel(rid) took it out
+    expired: bool = False      # deadline / injected TTL fired
+    failed: str | None = None  # terminal failure, e.g. preemption limit
     # --- engine-internal state ---
     n_cached: int = 0          # KV rows already written for this sequence
     next_token: int | None = None
+    n_preempted: int = 0       # times this request lost its pages
+    admit_seq: int = -1        # monotonic admission order (victim pick)
+    not_before_step: int = 0   # replay backoff: earliest re-admission step
     t_submit: float | None = None   # perf_counter at submit (telemetry)
     t_admit: float | None = None    # perf_counter at admission
 
     @property
     def done(self) -> bool:
-        return self.stop_hit or len(self.generated) >= self.sampling.max_new
+        return (self.stop_hit or self.cancelled or self.expired
+                or self.failed is not None
+                or len(self.generated) >= self.sampling.max_new)
+
+    @property
+    def outcome(self) -> str | None:
+        """Why the request ended: "length" | "stop" | "cancelled" |
+        "expired" | "failed", or None while still in flight."""
+        if self.cancelled:
+            return "cancelled"
+        if self.expired:
+            return "expired"
+        if self.failed is not None:
+            return "failed"
+        if self.stop_hit:
+            return "stop"
+        if len(self.generated) >= self.sampling.max_new:
+            return "length"
+        return None
 
 
 class ServeEngine:
@@ -146,14 +207,27 @@ class ServeEngine:
                  page_size: int = 16, max_seqs: int = 4,
                  prefill_chunk: int = 8, token_budget: int | None = None,
                  seed: int = 0, record_logits: bool = False,
+                 admission: str = "optimistic",
+                 headroom_pages: int | None = None,
+                 max_preemptions: int = 3,
+                 max_context: int | None = None,
+                 deadline_s: float | None = None,
+                 faults: FaultPlan | None = None,
                  tracer: Tracer | None = None,
                  quality_probes: QualityProbes | None = None):
+        if admission not in ("optimistic", "reserve"):
+            raise ValueError(f"admission must be 'optimistic' or 'reserve', "
+                             f"got {admission!r}")
         self.adapter = adapter
         self.spec = adapter.state_spec
         self.max_seqs = max_seqs
         self.prefill_chunk = prefill_chunk
         self.token_budget = token_budget or max(max_seqs, prefill_chunk)
         self.record_logits = record_logits
+        self.admission = admission
+        self.max_preemptions = max_preemptions
+        self.default_deadline_s = deadline_s
+        self.faults = faults
         # one register slot per concurrent sequence (+ the scratch slot):
         # admission is bounded by max_seqs, so slots can never run out
         # before sequence slots do
@@ -161,11 +235,26 @@ class ServeEngine:
         self.kv = PagedKVCache(adapter.init_state(n_pages, page_size,
                                                   n_slots),
                                n_pages, page_size, n_slots=n_slots)
+        cap = self.kv.allocator.capacity
+        # headroom watermark: pages optimistic admission keeps free for
+        # decode growth of the already-running batch (waived for replay
+        # re-admission — a replay's requirement is already its real
+        # footprint, and waiving it keeps replays always admittable)
+        self.headroom_pages = min(max_seqs, cap // 4) \
+            if headroom_pages is None else headroom_pages
+        # context window: explicit, else the pool bound for kv specs
+        # (register-only state never grows, so there is no implied bound)
+        self.max_context = max_context if max_context is not None \
+            else (cap * page_size if self.spec.kv else None)
         self.queue: list[EngineRequest] = []
         self.prefilling: list[EngineRequest] = []
         self.decoding: list[EngineRequest] = []
-        self._committed: dict[int, int] = {}   # rid → reserved page count
-        self._key = jax.random.PRNGKey(seed)
+        self._committed: dict[int, int] = {}   # rid → committed page count
+        self._committed_total = 0              # == sum(_committed.values())
+        self._terminal: list[EngineRequest] = []   # drained by step()
+        self._step_index = 0                   # never reset (faults key on it)
+        self._admit_seq = 0
+        self._base_key = jax.random.PRNGKey(seed)
         # jit cache for the fused phase dispatches, keyed on the kernels
         # flag (mirrors QuantizedDenseLM._jitted)
         self._jit_cache: dict = {}
@@ -207,16 +296,34 @@ class ServeEngine:
             raise ValueError("top_p must be in (0, 1]")
         if any(len(seq) == 0 for seq in req.sampling.stop):
             raise ValueError("stop sequences must be non-empty")
-        if req.n_cached or req.generated:
+        if req.n_cached or req.generated or req.done:
             raise ValueError(f"request {req.rid} carries stale engine "
                              "state; submit a fresh EngineRequest")
         if any(req.rid == r.rid for r in self.queue + self.active):
             raise ValueError(f"rid {req.rid} already queued or active")
-        need = self._pages_needed(req)
-        if need > self.kv.allocator.capacity:
+        total = len(req.prompt) + req.sampling.max_new
+        if self.max_context is not None and total > self.max_context:
             raise ValueError(
-                f"request {req.rid} needs {need} pages; pool capacity is "
-                f"{self.kv.allocator.capacity}")
+                f"request {req.rid}: prompt ({len(req.prompt)} tokens) + "
+                f"max_new ({req.sampling.max_new}) exceeds the model "
+                f"context window ({self.max_context} tokens)")
+        if self.spec.kv:
+            worst = pages_for(total, self.kv.page_size)
+            cap = self.kv.allocator.capacity
+            if worst > cap:
+                raise ValueError(
+                    f"request {req.rid} needs {worst} pages; pool capacity "
+                    f"is {cap}")
+            if self.admission == "optimistic" \
+                    and pages_for(len(req.prompt), self.kv.page_size) \
+                    + self.headroom_pages > cap:
+                raise ValueError(
+                    f"request {req.rid}: prompt pages + headroom "
+                    f"({self.headroom_pages}) exceed pool capacity {cap} — "
+                    "it could never be admitted (shrink the prompt or the "
+                    "headroom watermark)")
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
         req.t_submit = time.perf_counter()
         self.queue.append(req)
         self.metrics.counter("engine.requests.submitted").inc()
@@ -226,30 +333,54 @@ class ServeEngine:
                                     "max_new": req.sampling.max_new})
             self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
 
+    def _stream(self, req: EngineRequest) -> list[int]:
+        """The token stream prefill must cache: the prompt, plus — for a
+        preempted request being replayed — every already-generated token
+        (all host-known, so recovery needs no swap traffic)."""
+        return req.prompt + req.generated
+
     def _pages_needed(self, req: EngineRequest) -> int:
-        """Worst-case KV pages this request reserves at admission (0 for
-        register-only models — their state never grows)."""
+        """KV pages admission requires for this request (0 for
+        register-only models — their state never grows): the worst case
+        under `"reserve"`, the prefill stream's pages under
+        `"optimistic"` (growth is backed by preemption)."""
         if not self.spec.kv:
             return 0
-        return pages_for(len(req.prompt) + req.sampling.max_new,
-                         self.kv.page_size)
+        if self.admission == "reserve":
+            return pages_for(len(req.prompt) + req.sampling.max_new,
+                             self.kv.page_size)
+        return pages_for(len(self._stream(req)), self.kv.page_size)
 
     def _admit(self):
-        while self.queue and len(self.active) < self.max_seqs:
-            req = self.queue[0]
+        cap = self.kv.allocator.capacity
+        i = 0
+        while i < len(self.queue) and len(self.active) < self.max_seqs:
+            req = self.queue[i]
+            if req.not_before_step > self._step_index:
+                i += 1               # replay backoff: try later entries
+                continue
             need = self._pages_needed(req)
-            if sum(self._committed.values()) + need \
-                    > self.kv.allocator.capacity:
+            headroom = self.headroom_pages \
+                if self.admission == "optimistic" and not req.n_preempted \
+                else 0
+            if self._committed_total + need + headroom > cap:
                 self.metrics.counter("engine.admission.blocked").inc()
                 return           # head-of-line blocks until pages free up
-            self.queue.pop(0)
+            self.queue.pop(i)
             self.kv.open(req.rid)     # before committing: if this raises,
             self._committed[req.rid] = need   # no reservation leaks
+            self._committed_total += need
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
             self.prefilling.append(req)
-            req.t_admit = time.perf_counter()
             self.metrics.counter("engine.requests.admitted").inc()
-            self.metrics.histogram("engine.admission.wait_s").observe(
-                max(req.t_admit - req.t_submit, 0.0))
+            if req.t_admit is None:
+                # client-visible queueing delay: time to *first* admission
+                # (a replay's re-admission shows up in the preemption
+                # counters and e2e latency, not here)
+                req.t_admit = time.perf_counter()
+                self.metrics.histogram("engine.admission.wait_s").observe(
+                    max(req.t_admit - req.t_submit, 0.0))
             if self.tracer:
                 self.tracer.end("queued", pid=PID_REQUESTS, tid=req.rid)
                 self.tracer.begin("prefill", pid=PID_REQUESTS, tid=req.rid)
@@ -258,9 +389,13 @@ class ServeEngine:
                         "alloc_slot", pid=PID_REQUESTS, tid=req.rid,
                         args={"slot": self.kv.slots[req.rid]})
 
-    def _finish(self, req: EngineRequest):
+    def _release(self, req: EngineRequest):
+        """Return an admitted request's pages/slot and its commitment."""
         self.kv.release(req.rid)
-        del self._committed[req.rid]
+        self._committed_total -= self._committed.pop(req.rid)
+
+    def _finish(self, req: EngineRequest):
+        self._release(req)
         m = self.metrics
         m.counter("engine.requests.finished").inc()
         if req.stop_hit:
@@ -274,17 +409,172 @@ class ServeEngine:
                             args={"generated": len(req.generated),
                                   "stop_hit": req.stop_hit})
 
+    # ------------------------------------------------------------------
+    # lifecycle: cancel / expire / preempt
+    # ------------------------------------------------------------------
+
+    def _phase_of(self, req: EngineRequest) -> str:
+        if req in self.queue:
+            return "queued"
+        if req in self.prefilling:
+            return "prefill"
+        if req in self.decoding:
+            return "decode"
+        raise ValueError(f"rid {req.rid} is not queued or active")
+
+    def _by_rid(self, rid: int) -> EngineRequest:
+        for r in self.queue + self.active:
+            if r.rid == rid:
+                return r
+        raise ValueError(f"rid {rid} is not queued or active")
+
+    def _terminate(self, req: EngineRequest, outcome: str):
+        """Take `req` out of whatever phase it is in: pages and slot
+        scrubbed + released (admitted requests), books rebalanced, the
+        terminal flag set, and the request queued for return from the
+        current/next `step()`."""
+        phase = self._phase_of(req)
+        if phase == "queued":
+            self.queue.remove(req)
+        else:
+            (self.prefilling if phase == "prefill"
+             else self.decoding).remove(req)
+            self._release(req)
+        if outcome == "cancelled":
+            req.cancelled = True
+        elif outcome == "expired":
+            req.expired = True
+        # "failed" requests carry their reason in req.failed already
+        self.metrics.counter(f"engine.requests.{outcome}").inc()
+        if self.tracer:
+            self.tracer.end(phase, pid=PID_REQUESTS, tid=req.rid)
+            self.tracer.end("request", pid=PID_REQUESTS, tid=req.rid,
+                            args={"outcome": outcome,
+                                  "generated": len(req.generated)})
+        self._terminal.append(req)
+
+    def cancel(self, rid: int) -> EngineRequest:
+        """Cancel a queued or mid-flight request: its pages and register
+        slot are scrubbed and returned, books stay balanced, and the
+        request (marked `cancelled`) is also returned from the next
+        `step()`/`run()`."""
+        req = self._by_rid(rid)
+        self._terminate(req, "cancelled")
+        return req
+
+    def _expire_deadlines(self):
+        now = time.perf_counter()
+        for req in self.queue + self.active:
+            if req.deadline_s is not None and req.t_submit is not None \
+                    and now - req.t_submit > req.deadline_s:
+                self._terminate(req, "expired")
+
+    def _apply_faults(self):
+        if self.faults is None:
+            return
+        live = sorted(r.rid for r in self.queue + self.active)
+        for rid in self.faults.cancels_due(self._step_index, live):
+            self.cancel(rid)
+        live = sorted(r.rid for r in self.queue + self.active)
+        for rid in self.faults.expiries_due(self._step_index, live):
+            self._terminate(self._by_rid(rid), "expired")
+
+    def _maybe_dispatch_fault(self, phase: str):
+        if self.faults is None:
+            return
+        kind = self.faults.take_dispatch_fault(self._step_index)
+        if kind == "delay":
+            self.metrics.counter("engine.dispatch.faults").inc()
+            time.sleep(self.faults.dispatch_delay_s)
+        elif kind == "fail":
+            raise DispatchFault(
+                f"injected dispatch failure at step {self._step_index} "
+                f"({phase})")
+
+    def _preempt(self, req: EngineRequest):
+        """Victimize an active request: scrub + release its pages (and
+        slot) through the normal release path, then either re-queue it
+        at the front as a replay (prefill of prompt + generated, with
+        exponential step backoff) or — past `max_preemptions` — fail it
+        terminally instead of livelocking."""
+        phase = self._phase_of(req)
+        (self.prefilling if phase == "prefill"
+         else self.decoding).remove(req)
+        m = self.metrics
+        m.counter("engine.preemptions").inc()
+        # the KV rows thrown away here are exactly what replay recomputes
+        m.counter("engine.replayed_prefill_tokens").inc(req.n_cached)
+        self._release(req)
+        req.n_preempted += 1
+        req.n_cached = 0
+        req.next_token = None
+        if self.tracer:
+            self.tracer.end(phase, pid=PID_REQUESTS, tid=req.rid)
+            self.tracer.instant("preempted", pid=PID_REQUESTS, tid=req.rid,
+                                args={"n_preempted": req.n_preempted})
+        if req.n_preempted > self.max_preemptions:
+            req.failed = (f"preempted {req.n_preempted} times "
+                          f"(max_preemptions={self.max_preemptions})")
+            self.metrics.counter("engine.requests.failed").inc()
+            if self.tracer:
+                self.tracer.end("request", pid=PID_REQUESTS, tid=req.rid,
+                                args={"outcome": "failed",
+                                      "generated": len(req.generated)})
+            self._terminal.append(req)
+        else:
+            req.not_before_step = \
+                self._step_index + 2 ** (req.n_preempted - 1)
+            if self.tracer:
+                self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
+            self.queue.insert(0, req)
+
+    def _handle_exhaustion(self):
+        """The page pool exhausted mid-growth: preempt the best victim —
+        fewest generated tokens (least work lost), latest-admitted
+        breaking ties — among active requests that actually hold pages."""
+        holders = [r for r in self.active if self.kv.tables.get(r.rid)]
+        if not holders:
+            alloc = self.kv.allocator
+            raise EngineStalledError(
+                "page pool exhausted but no active request holds pages — "
+                f"allocator books are broken (capacity {alloc.capacity}, "
+                f"free {alloc.n_free}, committed {self._committed_total})")
+        victim = min(holders,
+                     key=lambda r: (len(r.generated), -r.admit_seq))
+        self._preempt(victim)
+
+    def _check_stalled(self):
+        """Raise a diagnosable error when head-of-line demand can never
+        be satisfied: nothing is active (so no pages will ever free up)
+        and an admission-eligible request is still blocked."""
+        if self.active or not self.queue:
+            return
+        eligible = [r for r in self.queue
+                    if r.not_before_step <= self._step_index]
+        if not eligible:
+            return        # every entry is in replay backoff; steps advance
+        alloc = self.kv.allocator
+        who = "; ".join(
+            f"rid {r.rid} needs {self._pages_needed(r)} pages"
+            for r in eligible)
+        raise EngineStalledError(
+            "scheduler stalled: no active sequences and admission cannot "
+            f"proceed (capacity {alloc.capacity}, free {alloc.n_free}, "
+            f"committed {self._committed_total}, headroom "
+            f"{self.headroom_pages if self.admission == 'optimistic' else 0}"
+            f"); blocked: {who}")
+
     def _fused(self, name: str, impl, variant=None):
         """One fused device dispatch per phase: forward (page writes +
-        table walk inside) → sample (plus the PRNG split) trace into a
-        single jit'd call, so per-step host overhead stays flat as the
-        model grows. The pool is donated — a pool sized to fill HBM must
-        not need a second copy live across the in-place page update.
-        Compiled once per (phase, kernels-enabled, variant) triple with
-        the flag re-pinned inside the traced body, so `use_kernels(...)`
-        scopes keep selecting the path they request instead of replaying
-        the first-traced one; `variant` keys host-known static choices
-        (e.g. whether any row needs top-k/p filtering)."""
+        table walk inside) → sample trace into a single jit'd call, so
+        per-step host overhead stays flat as the model grows. The pool is
+        donated — a pool sized to fill HBM must not need a second copy
+        live across the in-place page update. Compiled once per (phase,
+        kernels-enabled, variant) triple with the flag re-pinned inside
+        the traced body, so `use_kernels(...)` scopes keep selecting the
+        path they request instead of replaying the first-traced one;
+        `variant` keys host-known static choices (e.g. whether any row
+        needs top-k/p filtering)."""
         key = (name, kops.kernels_enabled(), variant)
         fn = self._jit_cache.get(key)
         if fn is None:
@@ -310,7 +600,10 @@ class ServeEngine:
                      "engine.pages_walked", "engine.pages_walked_dense",
                      "engine.requests.submitted", "engine.requests.admitted",
                      "engine.requests.finished", "engine.requests.stop_hits",
-                     "engine.admission.blocked"):
+                     "engine.requests.cancelled", "engine.requests.expired",
+                     "engine.requests.failed", "engine.preemptions",
+                     "engine.replayed_prefill_tokens",
+                     "engine.dispatch.faults", "engine.admission.blocked"):
             m.counter(name)
         for name in ("engine.step.wall_s", "engine.step.budget_utilization",
                      "engine.decode.batch_occupancy",
@@ -327,7 +620,11 @@ class ServeEngine:
         m.gauge("engine.pages.capacity").set(alloc.capacity)
         m.gauge("engine.pages.in_use").set(alloc.in_use)
         m.gauge("engine.pages.peak_in_use").set(alloc.peak_in_use)
-        m.gauge("engine.pages.reserved").set(sum(self._committed.values()))
+        m.gauge("engine.pages.utilization").set(
+            alloc.in_use / max(alloc.capacity, 1))
+        m.gauge("engine.pages.utilization_peak").set(
+            alloc.peak_in_use / max(alloc.capacity, 1))
+        m.gauge("engine.pages.reserved").set(self._committed_total)
         m.gauge("engine.pages.scrubbed").set(self.kv.pages_scrubbed)
         m.gauge("engine.queue.depth").set(len(self.queue))
         m.gauge("engine.batch.decoding").set(len(self.decoding))
@@ -358,8 +655,9 @@ class ServeEngine:
         (names and held instrument references survive), restart the
         allocator high-water marks and scrub totals, and clear the
         kernel dispatch tallies and the probe sampling phase. Engine
-        *state* (queues, caches, PRNG key) is untouched — this is the
-        boundary the benches put between warm-up and the timed run."""
+        *state* (queues, caches, PRNG seed, step index) is untouched —
+        this is the boundary the benches put between warm-up and the
+        timed run."""
         self.metrics.reset()
         self.kv.allocator.reset_peak()
         if self.kv.registers is not None:
@@ -371,18 +669,52 @@ class ServeEngine:
             self.quality_probes.reset()
         self._update_gauges()
 
+    def check_books(self):
+        """Assert the accounting invariants the chaos tests lean on:
+        the running committed total matches the per-rid map, every
+        committed rid is active, and allocator free + in-use cover the
+        capacity exactly. Cheap enough to call after every step."""
+        assert self._committed_total == sum(self._committed.values()), \
+            (self._committed_total, self._committed)
+        active = {r.rid for r in self.active}
+        assert set(self._committed) == active == set(self.kv.tables), \
+            (set(self._committed), active, set(self.kv.tables))
+        alloc = self.kv.allocator
+        held = sum(len(t) for t in self.kv.tables.values())
+        assert alloc.in_use == held, (alloc.in_use, held)
+        assert alloc.n_free + alloc.in_use == alloc.capacity
+        if self.kv.registers is not None:
+            assert self.kv.registers.in_use == len(self.kv.slots)
+
     def _ensure(self, rid: int, n_tokens: int):
-        """`kv.ensure` plus an instant trace event when the growth
+        """`kv.ensure` plus the optimistic growth-commit update, the
+        fault-injection hook, and an instant trace event when the growth
         actually allocated pages."""
+        table = self.kv.tables[rid]
+        need = pages_for(n_tokens, self.kv.page_size) - len(table)
+        if need > 0 and self.faults is not None \
+                and any(self.kv.tables.get(r.rid) for r in self.active) \
+                and self.faults.take_exhaustion(self._step_index):
+            # only inject once a victim exists — a real allocator can't
+            # exhaust while zero pages are held
+            raise MemoryError(
+                f"injected page exhaustion at step {self._step_index}")
         if self.tracer is None:
             self.kv.ensure(rid, n_tokens)
-            return
-        before = self.kv.allocator.n_free
-        self.kv.ensure(rid, n_tokens)
-        got = before - self.kv.allocator.n_free
-        if got:
-            self.tracer.instant("alloc_pages", pid=PID_REQUESTS, tid=rid,
-                                args={"pages": got})
+        else:
+            before = self.kv.allocator.n_free
+            self.kv.ensure(rid, n_tokens)
+            got = before - self.kv.allocator.n_free
+            if got:
+                self.tracer.instant("alloc_pages", pid=PID_REQUESTS, tid=rid,
+                                    args={"pages": got})
+        # commitment follows real growth (no-op under "reserve", whose
+        # worst-case commitment always covers the table)
+        held = len(table)
+        cur = self._committed[rid]
+        if held > cur:
+            self._committed[rid] = held
+            self._committed_total += held - cur
 
     # -- back-compat counter views (the registry owns the numbers) -----
 
@@ -423,31 +755,47 @@ class ServeEngine:
         return any(r.sampling.top_k > 0 or r.sampling.top_p < 1.0
                    for r in batch)
 
-    def _decode_impl(self, state, params, key, bt, reg, tokens, fill, lens,
-                     temps, top_ks, top_ps, *, filtered, probe=False):
+    def _grow_decode(self):
+        """Grow every decoding sequence's table by one position,
+        preempting victims until growth fits (ensure is idempotent, so
+        the retry loop re-runs cheaply after each preemption)."""
+        if not self.spec.kv:
+            return
+        while True:
+            try:
+                for req in list(self.decoding):
+                    self._ensure(req.rid, req.n_cached + 1)
+                return
+            except MemoryError:
+                self._handle_exhaustion()
+
+    def _decode_impl(self, state, params, base, bt, reg, tokens, fill, lens,
+                     rids, temps, top_ks, top_ps, *, filtered, probe=False):
         # block-table-native: the forward writes each new KV row into its
         # page and attends by walking `bt` — no gathered slab exists.
         # `lens` are the true per-slot context lengths (0 for padded
         # rows): the kernel's ragged early-exit walks only each
         # sequence's live pages instead of every table column. `reg` is
         # each row's register slot (scratch for padded rows) for models
-        # whose spec carries fixed-size state. The probe variant (its own
-        # compiled executable via the jit-cache variant key) additionally
-        # returns the barrier-isolated per-layer quality stats — same
-        # dispatch shapes, same PRNG key consumption.
+        # whose spec carries fixed-size state. Sampling keys derive from
+        # (rid, lens) — lens IS the sampled token's stream position — so
+        # a replayed request resamples identically. The probe variant
+        # (its own compiled executable via the jit-cache variant key)
+        # additionally returns the barrier-isolated per-layer quality
+        # stats — same dispatch shapes, same sampling keys.
         if probe:
             logits, state, stats = self.adapter.forward_chunk(
                 params, tokens, state, fill, bt, lens, reg, probe=True)
         else:
             logits, state = self.adapter.forward_chunk(params, tokens, state,
                                                        fill, bt, lens, reg)
-        key, sub = jax.random.split(key)
         lg = logits[:, 0].astype(jnp.float32)
-        toks = _sample_tokens(sub, lg, temps, top_ks, top_ps,
+        keys = _row_keys(base, rids, lens)
+        toks = _sample_tokens(keys, lg, temps, top_ks, top_ps,
                               filtered=filtered)
         if probe:
-            return state, key, lg, toks, stats
-        return state, key, lg, toks
+            return state, lg, toks, stats
+        return state, lg, toks
 
     def _decode_once(self) -> list[EngineRequest]:
         batch = self.decoding
@@ -456,8 +804,6 @@ class ServeEngine:
         rids = [r.rid for r in batch] + [None] * (b - len(batch))
         new_lens = [r.n_cached + 1 for r in batch]
         if self.spec.kv:
-            for req in batch:
-                self._ensure(req.rid, req.n_cached + 1)
             n_cols = _next_pow2(max(
                 pages_for(r.n_cached + 1, self.kv.page_size) for r in batch))
             bt = self.kv.block_table_array(rids, n_cols)
@@ -474,6 +820,8 @@ class ServeEngine:
         fill = jnp.asarray([r.n_cached for r in batch]
                            + [0] * (b - len(batch)), jnp.int32)
         lens = jnp.asarray(new_lens + [0] * (b - len(batch)), jnp.int32)
+        rid_rows = jnp.asarray([r.rid for r in batch]
+                               + [0] * (b - len(batch)), jnp.int32)
 
         temps = jnp.asarray([r.sampling.temperature for r in batch]
                             + [0.0] * (b - len(batch)), jnp.float32)
@@ -493,12 +841,12 @@ class ServeEngine:
             functools.partial(self._decode_impl, filtered=filtered,
                               probe=probe),
             variant=(filtered, probe))(
-            self.kv.state, self.adapter.params, self._key, bt, reg, tokens,
-            fill, lens, temps, top_ks, top_ps)
+            self.kv.state, self.adapter.params, self._base_key, bt, reg,
+            tokens, fill, lens, rid_rows, temps, top_ks, top_ps)
         if probe:
-            self.kv.state, self._key, logits, toks, stats = out
+            self.kv.state, logits, toks, stats = out
         else:
-            (self.kv.state, self._key, logits, toks), stats = out, None
+            (self.kv.state, logits, toks), stats = out, None
         if tr:
             jax.block_until_ready((self.kv.state, toks))
             tr.complete("dispatch.decode", ts0, tr.ts() - ts0,
@@ -526,8 +874,8 @@ class ServeEngine:
     # chunked prefill
     # ------------------------------------------------------------------
 
-    def _prefill_impl(self, state, params, key, bt, reg, tokens, start, last,
-                      lens, temp, top_k, top_p, *, filtered):
+    def _prefill_impl(self, state, params, base, bt, reg, tokens, start,
+                      last, lens, rids, temp, top_k, top_p, *, filtered):
         # padded tail rows are computed too (their queries may attend the
         # garbage keys the same forward wrote for earlier padding tokens,
         # so their outputs are meaningless and discarded); their in-page
@@ -539,26 +887,37 @@ class ServeEngine:
         # them (their outputs are discarded either way), and — via
         # valid_len = lens - start inside the model — keeps the padded
         # tail out of register-kind (SSM) carried state, whose update is
-        # a recurrence rather than a masked read.
+        # a recurrence rather than a masked read. `lens` doubles as the
+        # sampled token's stream position for the (rid, position) key.
         logits, state = self.adapter.forward_chunk(params, tokens, state,
                                                    start, bt, lens, reg)
-        key, sub = jax.random.split(key)
         lg = jax.lax.dynamic_index_in_dim(logits, last, axis=1,
                                           keepdims=False)[0]
         lg = lg.astype(jnp.float32)
-        return state, key, lg, _sample_tokens(sub, lg[None], temp, top_k,
-                                              top_p, filtered=filtered)[0]
+        keys = _row_keys(base, rids, lens)
+        return state, lg, _sample_tokens(keys, lg[None], temp, top_k,
+                                         top_p, filtered=filtered)[0]
 
     def _prefill_once(self, budget: int) -> tuple[int, list[EngineRequest]]:
-        """Advance the head-of-line prefill by up to `budget` prompt
-        tokens; returns (tokens consumed, requests finished)."""
+        """Advance the head-of-line prefill by up to `budget` tokens of
+        its stream (the prompt, plus already-generated tokens when
+        replaying a preempted request); returns (tokens consumed,
+        requests finished)."""
         req = self.prefilling[0]
+        stream = self._stream(req)
         start = req.n_cached
         m = self.metrics
-        real = min(self.prefill_chunk, budget, len(req.prompt) - start)
+        real = min(self.prefill_chunk, budget, len(stream) - start)
         padded = _next_pow2(real)
         if self.spec.kv:
-            self._ensure(req.rid, start + real)
+            while True:
+                try:
+                    self._ensure(req.rid, start + real)
+                    break
+                except MemoryError:
+                    self._handle_exhaustion()
+                    if req not in self.prefilling:
+                        return 0, []    # the head itself was preempted
             n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
             bt = self.kv.block_table_array([req.rid], n_cols)
             m.counter("engine.pages_walked").inc(
@@ -568,22 +927,24 @@ class ServeEngine:
             bt = None
         reg = self.kv.register_index_array([req.rid]) if self.spec.register \
             else None
+        self._maybe_dispatch_fault("prefill")
 
         # every device-side shape depends only on (padded, n_cols), both
         # powers of two, so prefill compiles a bounded set of variants;
         # `last` (= real - 1) rides along as a traced scalar
-        chunk = req.prompt[start:start + real] + [0] * (padded - real)
+        chunk = stream[start:start + real] + [0] * (padded - real)
         filtered = self._wants_filtering([req])
         tr = self.tracer
         ts0 = tr.ts() if tr else 0.0
-        self.kv.state, self._key, last, tok = self._fused(
+        self.kv.state, last, tok = self._fused(
             "prefill",
             functools.partial(self._prefill_impl, filtered=filtered),
             variant=filtered)(
-            self.kv.state, self.adapter.params, self._key, bt, reg,
+            self.kv.state, self.adapter.params, self._base_key, bt, reg,
             jnp.asarray([chunk], jnp.int32), jnp.asarray(start, jnp.int32),
             jnp.asarray(real - 1, jnp.int32),
             jnp.asarray([start + real], jnp.int32),
+            jnp.asarray([req.rid], jnp.int32),
             jnp.asarray([req.sampling.temperature], jnp.float32),
             jnp.asarray([req.sampling.top_k], jnp.int32),
             jnp.asarray([req.sampling.top_p], jnp.float32))
@@ -597,9 +958,11 @@ class ServeEngine:
         m.counter("engine.prefill_tokens").inc(real)
         m.histogram("engine.prefill.chunk_tokens").observe(real)
         finished = []
-        if req.n_cached == len(req.prompt):
-            # prompt fully cached: the fused call already sampled the
-            # first generated token from the last real position's logits
+        if req.n_cached == len(stream):
+            # stream fully cached: the fused call already sampled the
+            # next token from the last real position's logits (for a
+            # replay, this continues the original sequence exactly — the
+            # (rid, position) key is the one the undisturbed decode used)
             self.prefilling.remove(req)
             req.generated.append(int(tok))
             req.next_token = int(tok)
@@ -622,23 +985,45 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> list[EngineRequest]:
-        """One engine iteration; returns requests that completed."""
+        """One engine iteration; returns every request that reached a
+        terminal state during it (completed, cancelled, expired, or
+        failed — check `req.outcome`)."""
         m = self.metrics
         t0 = time.perf_counter()
         gen0 = m.counter("engine.generated_tokens").value
+        self._apply_faults()
+        self._expire_deadlines()
         self._admit()
+        self._check_stalled()
         finished = []
         budget = self.token_budget
         spent = 0
         if self.decoding:
-            budget -= len(self.decoding)
-            spent += len(self.decoding)
-            finished.extend(self._decode_once())
-        while budget > 0 and self.prefilling:
-            used, fin = self._prefill_once(budget)
+            try:
+                self._maybe_dispatch_fault("decode")
+                self._grow_decode()
+                if self.decoding:
+                    budget -= len(self.decoding)
+                    spent += len(self.decoding)
+                    finished.extend(self._decode_once())
+            except DispatchFault:
+                m.counter("engine.dispatch.faults").inc()
+        # `guard` bounds the zero-progress retries a preempted prefill
+        # head can cause within one step (each retry strictly shrinks
+        # the active set, so this terminates regardless)
+        guard = len(self.prefilling) + 1
+        while budget > 0 and self.prefilling and guard > 0:
+            try:
+                used, fin = self._prefill_once(budget)
+            except DispatchFault:
+                m.counter("engine.dispatch.faults").inc()
+                break
             budget -= used
             spent += used
             finished.extend(fin)
+            if used == 0:
+                guard -= 1
+        self._step_index += 1
         m.counter("engine.steps").inc()
         wall = time.perf_counter() - t0
         m.histogram("engine.step.wall_s").observe(wall)
@@ -651,10 +1036,14 @@ class ServeEngine:
         for _ in range(m.counter("engine.generated_tokens").value - gen0):
             lat.observe(wall)
         self._update_gauges()
+        finished.extend(self._terminal)
+        self._terminal.clear()
         return finished
 
     def run(self) -> list[EngineRequest]:
         done = []
         while self.queue or self.active:
             done.extend(self.step())
+        done.extend(self._terminal)   # cancels issued between steps
+        self._terminal.clear()
         return done

@@ -30,7 +30,9 @@ from __future__ import annotations
 
 import math
 
-SCHEMA_VERSION = 1
+# v2: robustness taxonomy — preemption/cancel/expiry/failure counters,
+# replayed prefill tokens, dispatch-fault tally, live/peak utilization
+SCHEMA_VERSION = 2
 
 
 class Counter:

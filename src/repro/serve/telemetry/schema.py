@@ -32,6 +32,12 @@ REQUIRED_COUNTERS = (
     "engine.requests.admitted",
     "engine.requests.finished",
     "engine.requests.stop_hits",
+    "engine.requests.cancelled",
+    "engine.requests.expired",
+    "engine.requests.failed",
+    "engine.preemptions",
+    "engine.replayed_prefill_tokens",
+    "engine.dispatch.faults",
     "engine.admission.blocked",
 )
 
@@ -39,6 +45,8 @@ REQUIRED_GAUGES = (
     "engine.pages.capacity",
     "engine.pages.in_use",
     "engine.pages.peak_in_use",
+    "engine.pages.utilization",
+    "engine.pages.utilization_peak",
     "engine.pages.reserved",
     "engine.pages.scrubbed",
     "engine.queue.depth",

@@ -17,3 +17,6 @@ if _SRC not in sys.path:
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (subprocess compile/execute)")
+    config.addinivalue_line(
+        "markers", "chaos: fault-injection robustness test (engine "
+        "preemption/cancel/deadline invariants under a FaultPlan)")

@@ -1,0 +1,180 @@
+"""Allocator stress: random alloc/free/preempt/cancel interleavings.
+
+Property-based hammering of `PageAllocator` / `RegisterAllocator` — the
+host-side bookkeeping every engine robustness guarantee bottoms out in.
+After *every* operation the structural invariants must hold:
+
+  * free + in-use == capacity, and the free list mirrors its shadow set
+    (no duplicates, no scratch, nothing outside the pool);
+  * pages held by live sequences and the free list partition the pool —
+    no page is both held and free, none vanishes;
+  * a failed operation is a no-op: `MemoryError` on exhaustion and
+    `ValueError` on a double/invalid free leave the allocator state
+    byte-identical (the engine retries after preempting a victim, so a
+    half-mutated allocator would corrupt every book downstream).
+
+Runs under hypothesis when it is installed (minimized counterexamples);
+otherwise the same executor is driven by seeded `numpy` random op
+streams, so the property is exercised either way without adding a
+dependency.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.engine import PageAllocator, RegisterAllocator
+from repro.serve.engine.pages import SCRATCH_PAGE, SCRATCH_SLOT
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_PAGES = 12   # small pool → exhaustion and re-use happen constantly
+N_SLOTS = 5
+
+# op stream vocabulary: (kind, amount)
+#   0 = admit: allocate `amount` pages for a new sequence
+#   1 = grow: allocate `amount` more pages for a random live sequence
+#   2 = release/cancel: free every page of a random live sequence
+#   3 = preempt: same release path, but the sequence stays eligible to
+#       be re-admitted by a later admit op (allocator-level identical)
+#   4 = adversarial free: double-free a random free page (must raise)
+#   5 = adversarial free: free the scratch page (must raise)
+OPS = st.lists(st.tuples(st.integers(0, 5), st.integers(0, N_PAGES)),
+               max_size=200) if HAVE_HYPOTHESIS else None
+
+
+def _page_state(alloc):
+    return (list(alloc._free), set(alloc._free_set), alloc.peak_in_use)
+
+
+def _check_page_invariants(alloc, held):
+    assert alloc.n_free + alloc.in_use == alloc.capacity
+    assert len(alloc._free) == len(alloc._free_set) == len(set(alloc._free))
+    assert alloc._free_set == set(alloc._free)
+    held_pages = [p for pages in held.values() for p in pages]
+    assert len(held_pages) == len(set(held_pages)), "page held twice"
+    assert not (set(held_pages) & alloc._free_set), "page held AND free"
+    universe = set(range(SCRATCH_PAGE + 1, alloc.n_pages))
+    assert set(held_pages) | alloc._free_set == universe, "page vanished"
+    assert alloc.peak_in_use >= alloc.in_use
+
+
+def _exercise_pages(ops):
+    alloc = PageAllocator(N_PAGES)
+    held: dict[int, list[int]] = {}
+    rng = np.random.default_rng(0)   # only for picking among live rids
+    next_rid = 0
+    for kind, amount in ops:
+        before = _page_state(alloc)
+        if kind == 0:
+            try:
+                pages = alloc.alloc(amount)
+                held[next_rid] = pages
+                next_rid += 1
+            except MemoryError:
+                assert amount > len(before[0])
+                assert _page_state(alloc) == before, "exhaustion mutated"
+        elif kind == 1 and held:
+            rid = int(rng.choice(list(held)))
+            try:
+                held[rid].extend(alloc.alloc(amount))
+            except MemoryError:
+                assert _page_state(alloc) == before, "exhaustion mutated"
+        elif kind in (2, 3) and held:
+            rid = int(rng.choice(list(held)))
+            alloc.free(held.pop(rid))
+        elif kind == 4 and alloc.n_free:
+            # double free: the page is already on the free list
+            free_page = alloc._free[int(rng.integers(alloc.n_free))]
+            with pytest.raises(ValueError, match="double/invalid"):
+                alloc.free([free_page])
+            assert _page_state(alloc) == before, "failed free mutated"
+        elif kind == 5:
+            with pytest.raises(ValueError, match="double/invalid"):
+                alloc.free([SCRATCH_PAGE])
+            assert _page_state(alloc) == before, "failed free mutated"
+        _check_page_invariants(alloc, held)
+    # drain: everything still held frees cleanly and the pool is whole
+    for rid in list(held):
+        alloc.free(held.pop(rid))
+        _check_page_invariants(alloc, held)
+    assert alloc.n_free == alloc.capacity and alloc.in_use == 0
+
+
+def _exercise_registers(ops):
+    alloc = RegisterAllocator(N_SLOTS)
+    held: dict[int, int] = {}
+    rng = np.random.default_rng(0)
+    next_rid = 0
+    for kind, _ in ops:
+        before = (list(alloc._free), alloc.peak_in_use)
+        if kind in (0, 1):
+            try:
+                held[next_rid] = alloc.alloc()
+                next_rid += 1
+            except MemoryError:
+                assert alloc.n_free == 0
+                assert (list(alloc._free), alloc.peak_in_use) == before
+        elif kind in (2, 3) and held:
+            rid = int(rng.choice(list(held)))
+            alloc.free(held.pop(rid))
+        elif kind == 4 and alloc.n_free:
+            with pytest.raises(ValueError, match="double/invalid"):
+                alloc.free(alloc._free[0])
+            assert (list(alloc._free), alloc.peak_in_use) == before
+        elif kind == 5:
+            with pytest.raises(ValueError, match="double/invalid"):
+                alloc.free(SCRATCH_SLOT)
+            assert (list(alloc._free), alloc.peak_in_use) == before
+        assert alloc.n_free + alloc.in_use == alloc.capacity
+        assert len(alloc._free) == len(set(alloc._free))
+        assert not (set(held.values()) & set(alloc._free))
+    for rid in list(held):
+        alloc.free(held.pop(rid))
+    assert alloc.n_free == alloc.capacity
+
+
+def _random_ops(seed, n=200):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(0, 6)), int(rng.integers(0, N_PAGES + 1)))
+            for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(OPS)
+    def test_page_allocator_random_interleavings(ops):
+        _exercise_pages(ops)
+
+    @settings(max_examples=100, deadline=None)
+    @given(OPS)
+    def test_register_allocator_random_interleavings(ops):
+        _exercise_registers(ops)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_page_allocator_random_interleavings(seed):
+        _exercise_pages(_random_ops(seed))
+
+    @pytest.mark.parametrize("seed", range(10))
+    def test_register_allocator_random_interleavings(seed):
+        _exercise_registers(_random_ops(seed))
+
+
+def test_exhaustion_is_a_clean_no_op():
+    """The engine-facing contract in isolation: an alloc that cannot be
+    satisfied raises MemoryError and changes nothing, so the scheduler
+    can preempt a victim and retry on a consistent allocator."""
+    alloc = PageAllocator(N_PAGES)
+    got = alloc.alloc(5)
+    before = _page_state(alloc)
+    with pytest.raises(MemoryError):
+        alloc.alloc(N_PAGES)
+    assert _page_state(alloc) == before
+    alloc.free(got)
+    assert alloc.n_free == alloc.capacity

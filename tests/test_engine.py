@@ -408,3 +408,81 @@ def test_engine_respects_use_kernels_scope(stack):
     assert runs[True].generated == runs[False].generated
     for a, b in zip(runs[True].step_logits, runs[False].step_logits):
         np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------------------------------
+# robustness satellites: admission bookkeeping + submit-time validation
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("admission", ["reserve", "optimistic"])
+def test_committed_total_matches_sum(stack, admission):
+    """The O(n) admission bookkeeping: the running `_committed_total`
+    equals `sum(_committed.values())` after every step under both
+    policies (admit, growth, finish all update it), and drains to zero."""
+    adapter = _adapter(stack, "bf16")
+    prompts = [[(7 * i + j) % 500 for j in range(3 + i % 4)]
+               for i in range(8)]
+    eng = ServeEngine(adapter, n_pages=5, page_size=8, max_seqs=2,
+                      prefill_chunk=4, admission=admission)
+    for rid, p in enumerate(prompts):
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=3)))
+    done = []
+    while eng.queue or eng.active:
+        done.extend(eng.step())
+        assert eng._committed_total == sum(eng._committed.values())
+        eng.check_books()
+    assert len(done) == len(prompts)
+    assert eng._committed_total == 0 and not eng._committed
+    assert eng.kv.allocator.n_free == eng.kv.allocator.capacity
+
+
+def test_both_admission_policies_same_tokens(stack):
+    """With an ample pool, optimistic and reserve admission produce
+    bit-identical generations — the policy only changes *when* requests
+    are admitted, never what they generate."""
+    adapter = _adapter(stack, "bf16")
+    runs = {}
+    for mode in ("reserve", "optimistic"):
+        _, done = _engine_run(adapter, PROMPTS, admission=mode)
+        runs[mode] = {r: done[r].generated for r in done}
+    assert runs["reserve"] == runs["optimistic"]
+
+
+def test_submit_rejects_over_context_window(stack, family_stack):
+    """Satellite: prompt + max_new beyond the model context window is
+    rejected at submit with a clear error — for kv specs (where the pool
+    implies a bound) AND register-only specs (which reserve 0 pages and
+    previously sailed through to fail deep inside prefill)."""
+    adapter = _adapter(stack, "bf16")
+    # kv spec, explicit window
+    eng = ServeEngine(adapter, n_pages=33, page_size=8, max_context=16)
+    with pytest.raises(ValueError, match="context window"):
+        eng.submit(EngineRequest(rid=0, prompt=list(range(12)),
+                                 sampling=SamplingParams(max_new=8)))
+    # kv spec, implied window = capacity · page_size (32 · 8 = 256)
+    assert eng.max_context == 16
+    eng2 = ServeEngine(adapter, n_pages=33, page_size=8)
+    assert eng2.max_context == 32 * 8
+
+    # register-only spec: no pool-implied bound, but an explicit window
+    # must still reject at submit
+    _, _, _, ssm_adapter = family_stack("mamba2-1.3b")
+    assert not ssm_adapter.state_spec.kv
+    eng3 = ServeEngine(ssm_adapter, n_pages=5, page_size=8, max_context=10)
+    with pytest.raises(ValueError, match="context window"):
+        eng3.submit(EngineRequest(rid=0, prompt=list(range(8)),
+                                  sampling=SamplingParams(max_new=8)))
+    eng4 = ServeEngine(ssm_adapter, n_pages=5, page_size=8)
+    assert eng4.max_context is None     # register state never grows
+
+
+def test_optimistic_submit_rejects_never_admittable(stack):
+    """A prompt whose pages can never fit beside the headroom watermark
+    is rejected at submit instead of stalling the queue forever."""
+    adapter = _adapter(stack, "bf16")
+    eng = ServeEngine(adapter, n_pages=5, page_size=4, max_seqs=2,
+                      admission="optimistic", headroom_pages=2)
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.submit(EngineRequest(rid=0, prompt=list(range(12)),
+                                 sampling=SamplingParams(max_new=2)))
