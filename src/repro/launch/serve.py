@@ -15,6 +15,12 @@ smoke config); encoder/frontend archs are rejected with a capability
 error. `--legacy-scheduler` keeps the old dense-slot `BatchScheduler` for
 comparison (bf16/fake-quant only).
 
+`--prefix-cache` turns on the prefix-sharing radix cache (refcounted
+copy-on-write KV pages, kv-only specs; `--prefix-cache-pages N` bounds
+the LRU tree), and `--shared-prefix N` prepends one N-token system
+prompt to every request to exercise it; the run summary then reports the
+prefix hit-rate.
+
 Observability: `--metrics-json PATH` writes the engine's schema-validated
 registry snapshot, `--trace PATH` records request lifecycles and fused
 dispatches as Chrome Trace JSON (open in https://ui.perfetto.dev), and
@@ -61,6 +67,12 @@ def summary_line(snap: dict) -> str:
     if "engine.register_slots.peak_in_use" in g:
         out += (f" | peak slots {g['engine.register_slots.peak_in_use']:.0f}"
                 f"/{g['engine.register_slots.capacity']:.0f}")
+    lookups = c["engine.prefix.hits"] + c["engine.prefix.misses"]
+    if lookups:
+        out += (f" | prefix hit-rate "
+                f"{c['engine.prefix.hits'] / lookups:.0%} "
+                f"({c['engine.prefix.hit_tokens']} tokens, "
+                f"{c['engine.prefix.cow_copies']} COW)")
     out += (f" | preempt {c['engine.preemptions']} "
             f"cancel {c['engine.requests.cancelled']} "
             f"expire {c['engine.requests.expired']} "
@@ -110,6 +122,15 @@ def main(argv=None):
     ap.add_argument("--deadline-s", type=float, default=None,
                     help="per-request TTL in seconds, enforced at step "
                     "boundaries (expired requests return their pages)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the prefix-sharing radix cache "
+                    "(refcounted copy-on-write KV pages; kv-only specs)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    metavar="N", help="LRU budget of pool pages the radix "
+                    "tree may hold (default: unbounded — pressure evicts)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                    "request (exercises the prefix cache)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -132,8 +153,9 @@ def main(argv=None):
         print(f"quantized with {args.preset} (b={args.block_size})")
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab,
-                            size=int(rng.integers(3, 9))).tolist()
+    system = rng.integers(0, cfg.vocab, size=args.shared_prefix).tolist()
+    prompts = [system + rng.integers(0, cfg.vocab,
+                                     size=int(rng.integers(3, 9))).tolist()
                for _ in range(args.requests)]
 
     if args.probe_every and not args.integer_path:
@@ -149,6 +171,9 @@ def main(argv=None):
         if args.top_k > 0 or args.top_p < 1.0:
             raise SystemExit("--legacy-scheduler has no top-k/top-p "
                              "support; drop the flags or use the engine")
+        if args.prefix_cache:
+            raise SystemExit("--prefix-cache is a paged-engine feature; "
+                             "drop --legacy-scheduler")
         sched = BatchScheduler(smodel, sparams, slots=args.slots,
                                max_len=args.max_len,
                                temperature=args.temperature)
@@ -191,6 +216,8 @@ def main(argv=None):
                          admission=args.admission,
                          deadline_s=args.deadline_s,
                          max_context=args.max_len,
+                         prefix_cache=args.prefix_cache,
+                         prefix_cache_pages=args.prefix_cache_pages,
                          tracer=tracer, quality_probes=probes)
     for rid, prompt in enumerate(prompts):
         engine.submit(EngineRequest(

@@ -26,14 +26,32 @@ derive from `(rid, position)`, never from a global step key — and a
 request preempted past its bound fails terminally instead of
 livelocking. Requests can also be cancelled (`ServeEngine.cancel`) or
 expire against a deadline, and `faults.FaultPlan` injects deterministic
-exhaustion/dispatch/lifecycle chaos for the robustness tests. See each
-module's docstring for the design.
+exhaustion/dispatch/lifecycle chaos for the robustness tests.
+
+Prefix sharing (`prefix_cache=True`, kv-only specs) layers a radix tree
+(`radix.RadixCache`) over the page pool under a refcount/copy-on-write
+contract that `pages.PageAllocator` enforces: every page tracks its
+holders (`alloc` → 1, `incref` adds, `free` decrements and recycles
+only at zero), a page is written only by an exclusive owner — a
+sequence extending a shared page first copies it via the fused
+`PagedKVCache.cow_copy` dispatch — and scrub-on-release zeroes exactly
+the pages that dropped to refcount 0 plus the released register slot,
+in one fused dispatch per release. Finished requests donate their
+page-aligned prefix to the tree (LRU budget; eviction under page
+pressure runs before any preemption), admission starts `n_cached` at
+the matched length so prefill begins at the divergence offset, and a
+preempted victim's shared pages are unpinned, never scrubbed. Register
+slots stay excluded from sharing: SSM state is position-dependent.
+Tokens can stream per request via `submit(req, on_token=...)`,
+delivered at step boundaries. See each module's docstring for the
+design.
 """
 from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
                       StateSpec, as_servable, derive_state_spec)
 from .faults import DispatchFault, FaultPlan
 from .pages import (PageAllocator, PagedKVCache, RegisterAllocator,
                     pages_for)
+from .radix import RadixCache, RadixNode
 from .scheduler import (EngineRequest, EngineStalledError, SamplingParams,
                         ServeEngine)
 
@@ -42,5 +60,5 @@ __all__ = [
     "IntegerModelAdapter", "as_servable", "PageAllocator",
     "RegisterAllocator", "PagedKVCache", "pages_for", "EngineRequest",
     "EngineStalledError", "SamplingParams", "ServeEngine", "FaultPlan",
-    "DispatchFault",
+    "DispatchFault", "RadixCache", "RadixNode",
 ]

@@ -69,6 +69,17 @@ class StateSpec:
     register: bool
     register_leaves: tuple[str, ...] = ()
 
+    @property
+    def prefix_shareable(self) -> bool:
+        """Whether the prefix-sharing radix cache may serve this spec:
+        kv pages are position-addressable (row i depends only on tokens
+        ≤ i), so a cached prefix page is valid for any sequence with the
+        same leading tokens. Register (SSM conv/SSD) state is a running
+        summary whose value at a position depends on how it was chunked
+        — never shareable — so any spec carrying register state opts the
+        whole model out rather than serving half its layers stale."""
+        return self.kv and not self.register
+
 
 def derive_state_spec(cfg) -> StateSpec:
     """Per-family state spec — the capability check for servability.

@@ -35,22 +35,51 @@ asymmetric per-(position, head) int8/int4 KV cache (codes *and* their
 scale/zero rows), and the SSM conv/SSD slot pools.
 
 This module keeps the *bookkeeping*: the two allocators, block tables and
-register-slot maps, and release-time scrubbing (a freed register slot is
-zeroed before reuse — unlike KV rows, register state is read in full at
-the next admission, so stale state would leak across requests; freed KV
-pages are zeroed through the same method for defence in depth). The same
-`release()`/`scrub()` path serves normal completion, cancellation, and
-preemption — a preempted victim's pages return here and its state is
-recomputed later by replaying the host-known token stream, so the
-allocator never needs a swap-out notion. `alloc()` validates before
-mutating: `MemoryError` on exhaustion leaves the free list untouched,
-which is what lets the scheduler preempt a victim and simply retry. The
-legacy `gather_pages` / `scatter_*_rows` primitives survive purely as the
-test oracle the paged kernel is checked against.
+register-slot maps, and release-time scrubbing. KV pages are
+**refcounted** so many sequences — and the radix prefix cache
+(`radix.RadixCache`) — can point at the same immutable prefix page:
+`alloc()` hands out pages at refcount 1, `incref()` adds a holder, and
+`free()` *decrements*, returning a page to the free list only when its
+count hits zero (the list of pages that actually dropped to zero is
+`free()`'s return value). The refcount/copy-on-write contract is:
+
+  * a page is only ever *written* by a holder that owns it exclusively
+    (refcount 1): freshly-allocated pages, or a private copy made by the
+    scheduler's copy-on-write dispatch before extending a shared page;
+  * shared pages (refcount > 1) are immutable until every holder has
+    dropped its reference — so releasing one sharer can never perturb
+    the bits another sharer (or the prefix tree) is still reading;
+  * **scrub-on-release applies only to exclusively-owned state**: the
+    fused `scrub()` dispatch zeroes exactly the pages `free()` reported
+    as dropping to refcount 0, plus the released register slot. Zeroing
+    a still-referenced page would corrupt live readers; skipping the
+    zero on an exclusively-freed one would leak state into its next
+    owner (load-bearing for register slots, defence in depth for KV).
+
+Register slots are *excluded* from all sharing: SSM conv/SSD state is a
+position-dependent running summary, not an addressable prefix, so a slot
+always has exactly one owner and is scrubbed on every release.
+
+The same `release()`/`scrub()` path serves normal completion,
+cancellation, and preemption — a preempted victim's shared pages are
+simply unpinned (deref'd, never scrubbed) while its exclusive pages are
+zeroed and returned; its state is recomputed later by replaying the
+host-known token stream, so the allocator never needs a swap-out notion.
+`release(rid, adopted=k)` lets the prefix tree take over the request's
+reference on its first `k` pages instead of dropping them. `alloc()`
+validates before mutating: `MemoryError` on exhaustion leaves the free
+list untouched, which is what lets the scheduler evict cached prefixes
+or preempt a victim and simply retry. Each release scrubs through ONE
+fused jit dispatch (pages of every kv leaf + the register slot together,
+page counts padded to powers of two to bound the jit variants), tallied
+as `scrub_state` in the `kernels.ops` dispatch counts. The legacy
+`gather_pages` / `scatter_*_rows` primitives survive purely as the test
+oracle the paged kernel is checked against.
 
 Page 0 / slot 0 are reserved as scratch: padded batch rows (inactive
 slots) and padded block-table entries point at them, so their masked
-reads and dead writes can never touch a live sequence's state.
+reads and dead writes can never touch a live sequence's state (which is
+also what makes scratch-padded scrub index vectors harmless).
 """
 from __future__ import annotations
 
@@ -58,6 +87,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kops
 
 Params = dict[str, Any]
 
@@ -70,12 +101,47 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
 
 
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _scrub_impl(state: Params, page_idx: jnp.ndarray, slot: jnp.ndarray,
+                *, do_slot: bool) -> Params:
+    """One fused dispatch zeroing `page_idx` rows of every kv leaf and —
+    when `do_slot` — slot `slot` of every register leaf. `page_idx` may
+    be scratch-padded (zeroing the scratch page is a harmless dead
+    write); `slot` is scratch when only pages are scrubbed."""
+    kv = jax.tree.map(
+        lambda a: a.at[:, page_idx].set(jnp.zeros((), a.dtype)),
+        state["kv"])
+    register = state["register"]
+    if do_slot:
+        register = jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), register)
+    return {"kv": kv, "register": register}
+
+
+def _cow_impl(state: Params, src: jnp.ndarray, dst: jnp.ndarray) -> Params:
+    """Copy page `src` into page `dst` on every kv leaf (one dispatch)."""
+    return {"kv": jax.tree.map(
+        lambda a: a.at[:, dst].set(
+            jax.lax.dynamic_index_in_dim(a, src, axis=1, keepdims=False)),
+        state["kv"]), "register": state["register"]}
+
+
 class PageAllocator:
-    """Host-side free-list allocator over pool pages (page 0 reserved).
+    """Host-side refcounted free-list allocator over pool pages (page 0
+    reserved).
 
     A membership *set* shadows the LIFO stack so the double-free guard is
     O(1) per page instead of an O(n) list scan — freeing a long sequence's
-    pages used to be quadratic in pool size.
+    pages used to be quadratic in pool size. Every allocated page carries
+    a reference count (`alloc` → 1, `incref` adds holders); `free`
+    decrements and a page returns to the free list only at count zero, so
+    prefix-shared pages survive until their last holder lets go.
     """
 
     def __init__(self, n_pages: int):
@@ -84,6 +150,7 @@ class PageAllocator:
         self.n_pages = n_pages
         self._free = list(range(n_pages - 1, SCRATCH_PAGE, -1))
         self._free_set = set(self._free)
+        self._refs: dict[int, int] = {}   # page → holders (allocated only)
         # telemetry: high-water mark of pages simultaneously in use (the
         # utilization headroom number the metrics snapshot reports)
         self.peak_in_use = 0
@@ -112,10 +179,35 @@ class PageAllocator:
                               f"free {len(self._free)}")
         out = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
+        for p in out:
+            self._refs[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return out
 
-    def free(self, pages: list[int]):
+    def incref(self, pages: list[int]):
+        """Add one holder to each (allocated) page — validated as a
+        batch before mutating, like `free`."""
+        for p in pages:
+            if p <= SCRATCH_PAGE or p >= self.n_pages \
+                    or p in self._free_set:
+                raise ValueError(f"incref of unallocated page {p}")
+        for p in pages:
+            self._refs[p] += 1
+
+    def refcount(self, page: int) -> int:
+        """Current holder count (0 for free pages)."""
+        return self._refs.get(page, 0) if page not in self._free_set else 0
+
+    @property
+    def n_shared(self) -> int:
+        """Pages currently held by more than one owner (telemetry)."""
+        return sum(1 for c in self._refs.values() if c > 1)
+
+    def free(self, pages: list[int]) -> list[int]:
+        """Drop one reference per page; returns the pages whose count hit
+        zero and were actually returned to the free list (exactly the set
+        the caller must scrub — still-shared pages stay live and
+        untouched)."""
         # validate the whole batch (including intra-batch duplicates)
         # before mutating, so a raise leaves the allocator consistent
         batch = set()
@@ -124,8 +216,15 @@ class PageAllocator:
                     or p in self._free_set or p in batch:
                 raise ValueError(f"double/invalid free of page {p}")
             batch.add(p)
-        self._free.extend(pages)
-        self._free_set.update(batch)
+        freed = []
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                freed.append(p)
+        self._free.extend(freed)
+        self._free_set.update(freed)
+        return freed
 
 
 class RegisterAllocator:
@@ -253,6 +352,12 @@ class PagedKVCache:
         # zeroed), mirrored into the metrics snapshot as gauges
         self.pages_scrubbed = 0
         self.slots_scrubbed = 0
+        # fused state-maintenance dispatches, compiled once per padded
+        # page-count (scrub) and once at all (cow); both donate the state
+        # so a pool sized to fill HBM never needs a second live copy
+        self._scrub_jit = jax.jit(_scrub_impl, donate_argnums=(0,),
+                                  static_argnames=("do_slot",))
+        self._cow_jit = jax.jit(_cow_impl, donate_argnums=(0,))
 
     @property
     def pool(self) -> Params:
@@ -276,18 +381,28 @@ class PagedKVCache:
         if need > 0:
             table.extend(self.allocator.alloc(need))
 
-    def release(self, rid: int):
-        """Return `rid`'s pages and register slot, scrubbing both first."""
+    def release(self, rid: int, adopted: int = 0):
+        """Return `rid`'s pages and register slot. The first `adopted`
+        table entries' references were taken over by another holder (the
+        radix prefix tree) and are skipped; the rest are deref'd, and
+        only pages that dropped to refcount 0 are scrubbed — together
+        with the register slot — in one fused dispatch."""
         pages = self.tables.pop(rid)
         slot = self.slots.pop(rid, None)
-        self.scrub(pages, slot)
-        self.allocator.free(pages)
+        self.deref(pages[adopted:], slot)
         if slot is not None:
             self.registers.free(slot)
 
+    def deref(self, pages: list[int], slot: int | None = None):
+        """Drop one reference per page; scrub whatever actually freed
+        (refcount hit 0) plus `slot`, in one fused dispatch."""
+        freed = self.allocator.free(pages)
+        self.scrub(freed, slot)
+
     def scrub(self, pages: list[int], slot: int | None):
-        """Zero released state rows of BOTH kinds so a recycled page or
-        slot can never leak its predecessor's state.
+        """Zero released state rows of BOTH kinds — in ONE fused jit
+        dispatch per call — so a recycled page or slot can never leak its
+        predecessor's state.
 
         For register leaves this is load-bearing: the next sequence reads
         its slot's full state at admission (the SSM carried conv/SSD
@@ -295,18 +410,44 @@ class PagedKVCache:
         pages are only ever re-read after being overwritten (the causal
         mask / seq_lengths hide rows past the fill point), so their zeroing
         is defence in depth through the same method.
+
+        Callers must pass only *exclusively-owned* state: the engine
+        hands in exactly the pages `PageAllocator.free` reported as
+        dropping to refcount 0 — scrubbing a still-shared page would
+        corrupt every surviving holder. Page indices are padded to the
+        next power of two with the scratch page (whose content is
+        garbage by contract, so the dead extra zeroing is harmless and
+        the jit variant count stays bounded); the whole call is tallied
+        as one `scrub_state` dispatch in the `kernels.ops` counts.
         """
-        if pages and jax.tree.leaves(self.state["kv"]):
-            idx = jnp.asarray(pages, jnp.int32)
-            self.state["kv"] = jax.tree.map(
-                lambda a: a.at[:, idx].set(jnp.zeros((), a.dtype)),
-                self.state["kv"])
+        has_kv = bool(pages) and bool(jax.tree.leaves(self.state["kv"]))
+        do_slot = slot is not None \
+            and bool(jax.tree.leaves(self.state["register"]))
+        if not has_kv and not do_slot:
+            return
+        padded = _next_pow2(len(pages)) if has_kv else 1
+        idx = jnp.asarray(
+            (pages + [SCRATCH_PAGE] * (padded - len(pages))) if has_kv
+            else [SCRATCH_PAGE], jnp.int32)
+        kops._record_dispatch("scrub_state")
+        self.state = self._scrub_jit(
+            self.state, idx,
+            jnp.asarray(slot if do_slot else SCRATCH_SLOT, jnp.int32),
+            do_slot=do_slot)
+        if has_kv:
             self.pages_scrubbed += len(pages)
         if slot is not None:
-            self.state["register"] = jax.tree.map(
-                lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
-                self.state["register"])
             self.slots_scrubbed += 1
+
+    def cow_copy(self, src: int, dst: int):
+        """Copy-on-write primitive: duplicate page `src` into `dst`
+        across every kv leaf in one fused dispatch (tallied as
+        `cow_page_copy`). The caller owns `dst` exclusively and may then
+        overwrite rows past the shared prefix without perturbing `src`'s
+        other holders."""
+        kops._record_dispatch("cow_page_copy")
+        self.state = self._cow_jit(self.state, jnp.asarray(src, jnp.int32),
+                                   jnp.asarray(dst, jnp.int32))
 
     def page_of(self, rid: int, position: int) -> tuple[int, int]:
         """(page id, in-page offset) holding `position` of sequence `rid`."""

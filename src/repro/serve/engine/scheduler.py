@@ -24,6 +24,17 @@ Scheduling model (one `step()` = one engine iteration):
      updated at admit/growth/finish/preempt/cancel), so admission is
      O(queue), not O(queue · active). Backoff-waiting replays are
      skipped; otherwise admission blocks head-of-line for fairness.
+
+     With the **prefix cache** enabled (`prefix_cache=True`, kv-only
+     specs), admission additionally matches the request's token stream
+     against the radix tree (`radix.RadixCache`): fully-matched pages
+     are incref'd straight into the block table, a partial-page match is
+     recovered by copying that page (COW) into a private one, and
+     `n_cached` starts at the hit length so chunked prefill begins at
+     the divergence offset. Finished requests donate their page-aligned
+     prefix back to the tree at release (under an LRU page budget)
+     instead of scrubbing it; under page pressure the scheduler evicts
+     cached prefixes (`_reclaim`) before preempting any live sequence.
   3. **Decode** — every generating sequence advances one token in a
      single batched `forward_chunk` call with per-slot fill positions,
      block-table rows, and register slot indices, padded to `max_seqs`
@@ -67,6 +78,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +92,7 @@ from repro.serve.telemetry.trace import PID_REQUESTS, Tracer
 from .adapter import ServableModel
 from .faults import DispatchFault, FaultPlan
 from .pages import PagedKVCache, pages_for
+from .radix import RadixCache
 
 
 class EngineStalledError(RuntimeError):
@@ -170,6 +183,7 @@ class EngineRequest:
     failed: str | None = None  # terminal failure, e.g. preemption limit
     # --- engine-internal state ---
     n_cached: int = 0          # KV rows already written for this sequence
+    n_streamed: int = 0        # generated tokens already sent to on_token
     next_token: int | None = None
     n_preempted: int = 0       # times this request lost its pages
     admit_seq: int = -1        # monotonic admission order (victim pick)
@@ -212,6 +226,8 @@ class ServeEngine:
                  max_preemptions: int = 3,
                  max_context: int | None = None,
                  deadline_s: float | None = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_pages: int | None = None,
                  faults: FaultPlan | None = None,
                  tracer: Tracer | None = None,
                  quality_probes: QualityProbes | None = None):
@@ -246,7 +262,17 @@ class ServeEngine:
         # (register-only state never grows, so there is no implied bound)
         self.max_context = max_context if max_context is not None \
             else (cap * page_size if self.spec.kv else None)
+        # prefix-sharing radix cache: kv-only specs (register/SSM state is
+        # position-dependent — see StateSpec.prefix_shareable)
+        if prefix_cache and not self.spec.prefix_shareable:
+            raise ValueError(
+                f"adapter {adapter.name!r} carries register state: SSM "
+                "state is position-dependent, so the prefix cache cannot "
+                "serve this spec")
+        self.prefix_cache = RadixCache(self.kv, prefix_cache_pages) \
+            if prefix_cache else None
         self.queue: list[EngineRequest] = []
+        self._callbacks: dict[int, Any] = {}   # rid → on_token streaming cb
         self.prefilling: list[EngineRequest] = []
         self.decoding: list[EngineRequest] = []
         self._committed: dict[int, int] = {}   # rid → committed page count
@@ -285,7 +311,14 @@ class ServeEngine:
     def active(self) -> list[EngineRequest]:
         return self.prefilling + self.decoding
 
-    def submit(self, req: EngineRequest):
+    def submit(self, req: EngineRequest,
+               on_token: Callable[[int, int], None] | None = None):
+        """Queue a request. `on_token(rid, token)`, when given, streams
+        every generated token at the step boundary that produced it —
+        after the step's device work and bookkeeping, so the callback can
+        never perturb engine state mid-phase. Replays never re-deliver: a
+        preempted request resumes streaming where it left off (its
+        recomputed tokens are bit-identical, so nothing is retracted)."""
         if not req.prompt:
             raise ValueError("empty prompt")
         if req.sampling.max_new < 1:
@@ -326,6 +359,8 @@ class ServeEngine:
             req.deadline_s = self.default_deadline_s
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+        if on_token is not None:
+            self._callbacks[req.rid] = on_token
         self.metrics.counter("engine.requests.submitted").inc()
         if self.tracer:
             self.tracer.begin("request", pid=PID_REQUESTS, tid=req.rid,
@@ -370,6 +405,8 @@ class ServeEngine:
             self.kv.open(req.rid)     # before committing: if this raises,
             self._committed[req.rid] = need   # no reservation leaks
             self._committed_total += need
+            if self.prefix_cache is not None:
+                self._attach_prefix(req)
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
             self.prefilling.append(req)
@@ -389,13 +426,89 @@ class ServeEngine:
                         "alloc_slot", pid=PID_REQUESTS, tid=req.rid,
                         args={"slot": self.kv.slots[req.rid]})
 
-    def _release(self, req: EngineRequest):
-        """Return an admitted request's pages/slot and its commitment."""
-        self.kv.release(req.rid)
+    def _alloc_pages(self, n: int) -> list[int]:
+        """Allocate `n` pages, evicting cached prefixes under pressure —
+        the tree gives pages back before any live sequence is preempted."""
+        try:
+            return self.kv.allocator.alloc(n)
+        except MemoryError:
+            if self.prefix_cache is None or not self.prefix_cache.evict(n):
+                raise
+            return self.kv.allocator.alloc(n)
+
+    def _attach_prefix(self, req: EngineRequest):
+        """Seed a just-admitted request's block table from the radix
+        tree: incref the longest fully-matched page run, and when the
+        match extends into a page partially (or the last-token clamp cuts
+        one short), copy that page (COW) so the request can write into
+        its private copy. `n_cached` starts at the hit length, so chunked
+        prefill begins at the divergence offset."""
+        stream = self._stream(req)
+        pages, cow = self.prefix_cache.match(stream)
+        ps = self.kv.page_size
+        # the final stream position must always be recomputed: its logits
+        # seed the next sampled token, and prefill is the only phase that
+        # produces them
+        hit = min(len(pages) * ps + (cow[1] if cow else 0), len(stream) - 1)
+        m = self.metrics
+        if hit <= 0:
+            m.counter("engine.prefix.misses").inc()
+            return
+        n_full, extra = divmod(hit, ps)
+        shared = pages[:n_full]
+        src = (pages[n_full] if n_full < len(pages) else cow[0]) \
+            if extra else None
+        alloc = self.kv.allocator
+        alloc.incref(shared)      # our references; also pins them against
+        dst = None                # the eviction _alloc_pages may trigger
+        if src is not None:
+            alloc.incref([src])   # pin the COW source too
+            try:
+                dst = self._alloc_pages(1)[0]
+            except MemoryError:
+                # no room for a private copy — fall back to the full-page
+                # hit (deref can never scrub: the tree still holds src)
+                self.kv.deref([src])
+                hit, src = n_full * ps, None
+                if hit == 0:
+                    m.counter("engine.prefix.misses").inc()
+                    return
+        table = self.kv.tables[req.rid]
+        table.extend(shared)
+        if src is not None:
+            self.kv.cow_copy(src, dst)
+            self.kv.deref([src])          # unpin; our copy carries on
+            table.append(dst)
+            m.counter("engine.prefix.cow_copies").inc()
+        req.n_cached = hit
+        m.counter("engine.prefix.hits").inc()
+        m.counter("engine.prefix.hit_tokens").inc(hit)
+        if self.tracer:
+            self.tracer.instant("prefix_hit", pid=PID_REQUESTS, tid=req.rid,
+                                args={"tokens": hit, "cow": src is not None})
+
+    def _release(self, req: EngineRequest, adopted: int = 0):
+        """Return an admitted request's pages/slot and its commitment.
+        The first `adopted` table entries' references were consumed by
+        the radix tree (see `_finish`) and are skipped."""
+        self.kv.release(req.rid, adopted=adopted)
         self._committed_total -= self._committed.pop(req.rid)
 
     def _finish(self, req: EngineRequest):
-        self._release(req)
+        adopted = 0
+        if self.prefix_cache is not None:
+            # donate the finished stream's full pages to the tree: insert
+            # consumes our reference on every page passed (adopting new
+            # branches, dereffing duplicates of already-cached ones), so
+            # release skips exactly that many table entries
+            full = req.n_cached // self.kv.page_size
+            if full:
+                stream = self._stream(req)
+                table = self.kv.tables[req.rid]
+                self.prefix_cache.insert(stream[:full * self.kv.page_size],
+                                         table[:full])
+                adopted = full
+        self._release(req, adopted=adopted)
         m = self.metrics
         m.counter("engine.requests.finished").inc()
         if req.stop_hit:
@@ -502,8 +615,11 @@ class ServeEngine:
          else self.decoding).remove(req)
         m = self.metrics
         m.counter("engine.preemptions").inc()
-        # the KV rows thrown away here are exactly what replay recomputes
-        m.counter("engine.replayed_prefill_tokens").inc(req.n_cached)
+        # replayed_prefill_tokens is charged by the replay's prefill for
+        # what it *actually* recomputes — not here for what was lost: a
+        # victim whose prefix is still resident in the radix tree gets
+        # most of these rows back as pointer updates, and the shared
+        # pages released below are unpinned, never scrubbed
         self._release(req)
         req.n_preempted += 1
         req.n_cached = 0
@@ -527,6 +643,16 @@ class ServeEngine:
             if self.tracer:
                 self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
             self.queue.insert(0, req)
+
+    def _reclaim(self):
+        """Page pressure ladder: cached prefixes are speculative capacity,
+        live sequences are real work — evict from the radix tree first
+        and only preempt a victim when the tree has nothing unpinned left
+        to give."""
+        if self.prefix_cache is not None \
+                and self.prefix_cache.evict(max(1, self.max_seqs)):
+            return
+        self._handle_exhaustion()
 
     def _handle_exhaustion(self):
         """The page pool exhausted mid-growth: preempt the best victim —
@@ -603,7 +729,11 @@ class ServeEngine:
                      "engine.requests.cancelled", "engine.requests.expired",
                      "engine.requests.failed", "engine.preemptions",
                      "engine.replayed_prefill_tokens",
-                     "engine.dispatch.faults", "engine.admission.blocked"):
+                     "engine.dispatch.faults", "engine.admission.blocked",
+                     "engine.prefix.hits", "engine.prefix.misses",
+                     "engine.prefix.hit_tokens", "engine.prefix.cow_copies",
+                     "engine.prefix.inserted_pages",
+                     "engine.prefix.evicted_pages"):
             m.counter(name)
         for name in ("engine.step.wall_s", "engine.step.budget_utilization",
                      "engine.decode.batch_occupancy",
@@ -629,6 +759,23 @@ class ServeEngine:
         m.gauge("engine.queue.depth").set(len(self.queue))
         m.gauge("engine.batch.decoding").set(len(self.decoding))
         m.gauge("engine.batch.prefilling").set(len(self.prefilling))
+        m.gauge("engine.pages.shared").set(alloc.n_shared)
+        tree = self.prefix_cache
+        m.gauge("engine.prefix.tree_pages").set(
+            tree.n_pages if tree is not None else 0)
+        m.gauge("engine.prefix.tree_nodes").set(
+            tree.n_nodes if tree is not None else 0)
+        if tree is not None:
+            # the tree counts its own insert/evict traffic; mirror it as
+            # monotonic counters (same pattern as the kernel dispatch
+            # tallies in metrics_snapshot)
+            for name, n in (("engine.prefix.inserted_pages",
+                             tree.inserted_pages),
+                            ("engine.prefix.evicted_pages",
+                             tree.evicted_pages)):
+                c = m.counter(name)
+                if n > c.value:
+                    c.value = n
         regs = self.kv.registers
         if regs is not None:
             m.gauge("engine.register_slots.capacity").set(regs.capacity)
@@ -664,6 +811,11 @@ class ServeEngine:
             self.kv.registers.reset_peak()
         self.kv.pages_scrubbed = 0
         self.kv.slots_scrubbed = 0
+        if self.prefix_cache is not None:
+            # cached *contents* survive the window boundary (they are
+            # state, not measurement); only the traffic stats restart
+            self.prefix_cache.inserted_pages = 0
+            self.prefix_cache.evicted_pages = 0
         kops.reset_dispatch_counts()
         if self.quality_probes is not None:
             self.quality_probes.reset()
@@ -680,8 +832,22 @@ class ServeEngine:
         assert set(self._committed) == active == set(self.kv.tables), \
             (set(self._committed), active, set(self.kv.tables))
         alloc = self.kv.allocator
-        held = sum(len(t) for t in self.kv.tables.values())
-        assert alloc.in_use == held, (alloc.in_use, held)
+        # sharing-aware: a page may appear in several tables *and* the
+        # radix tree, but occupies the pool once — and its refcount must
+        # equal exactly that multiplicity (tree membership counts once)
+        counts: dict[int, int] = {}
+        for t in self.kv.tables.values():
+            for p in t:
+                counts[p] = counts.get(p, 0) + 1
+        if self.prefix_cache is not None:
+            tree_pages = self.prefix_cache.held_pages()
+            assert len(tree_pages) == self.prefix_cache.n_pages, \
+                (len(tree_pages), self.prefix_cache.n_pages)
+            for p in tree_pages:
+                counts[p] = counts.get(p, 0) + 1
+        assert alloc.in_use == len(counts), (alloc.in_use, len(counts))
+        for p, c in counts.items():
+            assert alloc.refcount(p) == c, (p, alloc.refcount(p), c)
         assert alloc.n_free + alloc.in_use == alloc.capacity
         if self.kv.registers is not None:
             assert self.kv.registers.in_use == len(self.kv.slots)
@@ -767,7 +933,7 @@ class ServeEngine:
                     self._ensure(req.rid, req.n_cached + 1)
                 return
             except MemoryError:
-                self._handle_exhaustion()
+                self._reclaim()
 
     def _decode_impl(self, state, params, base, bt, reg, tokens, fill, lens,
                      rids, temps, top_ks, top_ps, *, filtered, probe=False):
@@ -915,7 +1081,7 @@ class ServeEngine:
                     self._ensure(req.rid, start + real)
                     break
                 except MemoryError:
-                    self._handle_exhaustion()
+                    self._reclaim()
                     if req not in self.prefilling:
                         return 0, []    # the head itself was preempted
             n_cols = _next_pow2(pages_for(start + padded, self.kv.page_size))
@@ -956,6 +1122,10 @@ class ServeEngine:
 
         req.n_cached = start + real
         m.counter("engine.prefill_tokens").inc(real)
+        if req.n_preempted > 0:
+            # replay cost = rows actually recomputed (a prefix-tree hit
+            # at re-admission already skipped the resident ones)
+            m.counter("engine.replayed_prefill_tokens").inc(real)
         m.histogram("engine.prefill.chunk_tokens").observe(real)
         finished = []
         if req.n_cached == len(stream):
@@ -1038,7 +1208,28 @@ class ServeEngine:
         self._update_gauges()
         finished.extend(self._terminal)
         self._terminal.clear()
+        self._flush_streams(finished)
         return finished
+
+    def _flush_streams(self, finished: list[EngineRequest]):
+        """Step-boundary streaming: deliver every not-yet-streamed
+        generated token to its request's `on_token` callback. Runs after
+        all device work and bookkeeping for the step, so callbacks
+        observe a consistent engine and cannot perturb the step that
+        produced their tokens. Terminal requests' callbacks are dropped
+        after their final flush."""
+        if not self._callbacks:
+            return
+        for req in self.active + finished:
+            cb = self._callbacks.get(req.rid)
+            if cb is None:
+                continue
+            while req.n_streamed < len(req.generated):
+                tok = req.generated[req.n_streamed]
+                req.n_streamed += 1
+                cb(req.rid, tok)
+        for req in finished:
+            self._callbacks.pop(req.rid, None)
 
     def run(self) -> list[EngineRequest]:
         done = []
@@ -1046,4 +1237,5 @@ class ServeEngine:
             done.extend(self.step())
         done.extend(self._terminal)   # cancels issued between steps
         self._terminal.clear()
+        self._flush_streams(done)
         return done

@@ -32,7 +32,9 @@ import math
 
 # v2: robustness taxonomy — preemption/cancel/expiry/failure counters,
 # replayed prefill tokens, dispatch-fault tally, live/peak utilization
-SCHEMA_VERSION = 2
+# v3: prefix-sharing taxonomy — radix-cache hit/miss/hit-token/COW/
+# insert/evict counters, tree-size and shared-page gauges
+SCHEMA_VERSION = 3
 
 
 class Counter:

@@ -39,6 +39,12 @@ REQUIRED_COUNTERS = (
     "engine.replayed_prefill_tokens",
     "engine.dispatch.faults",
     "engine.admission.blocked",
+    "engine.prefix.hits",
+    "engine.prefix.misses",
+    "engine.prefix.hit_tokens",
+    "engine.prefix.cow_copies",
+    "engine.prefix.inserted_pages",
+    "engine.prefix.evicted_pages",
 )
 
 REQUIRED_GAUGES = (
@@ -52,6 +58,9 @@ REQUIRED_GAUGES = (
     "engine.queue.depth",
     "engine.batch.decoding",
     "engine.batch.prefilling",
+    "engine.pages.shared",
+    "engine.prefix.tree_pages",
+    "engine.prefix.tree_nodes",
 )
 
 REQUIRED_HISTOGRAMS = (

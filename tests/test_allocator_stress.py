@@ -166,6 +166,142 @@ else:
         _exercise_registers(_random_ops(seed))
 
 
+# ----------------------------------------------------------------------
+# refcounted sharing: share/unshare/cow/double-free interleavings
+# ----------------------------------------------------------------------
+#
+# op stream vocabulary (kind, amount):
+#   0 = admit: allocate `amount` pages for a new holder
+#   1 = share: a new holder increfs a random prefix of a random live
+#       holder's pages (the prefix-cache admission path)
+#   2 = release: free a random holder's pages (shared ones merely drop a
+#       reference; exclusive ones return to the free list)
+#   3 = cow: a holder that shares a page replaces it — alloc 1 fresh
+#       page, free the shared one (the copy-on-write divergence step)
+#   4 = adversarial: free a page that is already free (must raise), and
+#       free the same page twice in one batch (must raise)
+#   5 = adversarial: incref a free page / the scratch page (must raise)
+
+
+def _ref_state(alloc):
+    return (list(alloc._free), set(alloc._free_set),
+            dict(alloc._refs), alloc.peak_in_use)
+
+
+def _check_ref_invariants(alloc, held):
+    assert alloc.n_free + alloc.in_use == alloc.capacity
+    assert alloc._free_set == set(alloc._free)
+    assert len(alloc._free) == len(set(alloc._free))
+    mult: dict[int, int] = {}
+    for pages in held.values():
+        for p in pages:
+            mult[p] = mult.get(p, 0) + 1
+    # every refcount equals the page's multiplicity across holders, the
+    # shared-page gauge matches, and held ∪ free covers the pool exactly
+    assert dict(alloc._refs) == mult, (alloc._refs, mult)
+    for p in mult:
+        assert alloc.refcount(p) == mult[p]
+    assert alloc.n_shared == sum(1 for c in mult.values() if c > 1)
+    assert not (set(mult) & alloc._free_set), "page held AND free"
+    universe = set(range(SCRATCH_PAGE + 1, alloc.n_pages))
+    assert set(mult) | alloc._free_set == universe, "page vanished"
+
+
+def _exercise_refcounts(ops):
+    alloc = PageAllocator(N_PAGES)
+    held: dict[int, list[int]] = {}
+    rng = np.random.default_rng(0)
+    next_rid = 0
+    for kind, amount in ops:
+        before = _ref_state(alloc)
+        if kind == 0:
+            try:
+                held[next_rid] = alloc.alloc(amount)
+                next_rid += 1
+            except MemoryError:
+                assert amount > len(before[0])
+                assert _ref_state(alloc) == before, "exhaustion mutated"
+        elif kind == 1 and held:
+            donor = held[int(rng.choice(list(held)))]
+            prefix = donor[:1 + amount % max(len(donor), 1)] if donor else []
+            alloc.incref(prefix)
+            held[next_rid] = list(prefix)
+            next_rid += 1
+        elif kind == 2 and held:
+            rid = int(rng.choice(list(held)))
+            pages = held.pop(rid)
+            freed = alloc.free(pages)
+            # exactly the pages nobody else still holds came back
+            still = {p for ps in held.values() for p in ps}
+            assert set(freed) == set(pages) - still
+        elif kind == 3 and held:
+            rid = int(rng.choice(list(held)))
+            pages = held[rid]
+            shared = [i for i, p in enumerate(pages)
+                      if alloc.refcount(p) > 1]
+            if shared:
+                i = shared[amount % len(shared)]
+                try:
+                    fresh = alloc.alloc(1)[0]
+                except MemoryError:
+                    assert _ref_state(alloc) == before
+                    continue
+                freed = alloc.free([pages[i]])
+                assert freed == []          # others still hold it
+                pages[i] = fresh
+        elif kind == 4 and alloc.n_free:
+            free_page = alloc._free[int(rng.integers(alloc.n_free))]
+            with pytest.raises(ValueError, match="double/invalid"):
+                alloc.free([free_page])
+            assert _ref_state(alloc) == before, "failed free mutated"
+            dup = [p for ps in held.values() for p in ps][:1]
+            if dup:
+                with pytest.raises(ValueError, match="double/invalid"):
+                    alloc.free(dup + dup)   # intra-batch double free
+                assert _ref_state(alloc) == before, "failed free mutated"
+        elif kind == 5:
+            targets = [SCRATCH_PAGE]
+            if alloc.n_free:
+                targets.append(alloc._free[0])
+            for t in targets:
+                with pytest.raises(ValueError, match="unallocated"):
+                    alloc.incref([t])
+                assert _ref_state(alloc) == before, "failed incref mutated"
+        _check_ref_invariants(alloc, held)
+    for rid in list(held):
+        alloc.free(held.pop(rid))
+        _check_ref_invariants(alloc, held)
+    assert alloc.n_free == alloc.capacity and alloc.in_use == 0
+    assert not alloc._refs
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(OPS)
+    def test_refcount_random_interleavings(ops):
+        _exercise_refcounts(ops)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_refcount_random_interleavings(seed):
+        _exercise_refcounts(_random_ops(seed))
+
+
+def test_free_returns_exactly_the_zero_refcount_pages():
+    """The scrub contract: `free()` hands back precisely the pages whose
+    last reference just dropped — never a still-shared page."""
+    alloc = PageAllocator(N_PAGES)
+    a = alloc.alloc(3)
+    alloc.incref(a[:2])                 # second holder on a[0], a[1]
+    assert alloc.n_shared == 2
+    assert alloc.free(a) == [a[2]]      # only the exclusive page frees
+    assert alloc.refcount(a[0]) == 1 and alloc.refcount(a[2]) == 0
+    assert alloc.free(a[:2]) == a[:2]   # last holder → both free
+    assert alloc.n_free == alloc.capacity
+
+
 def test_exhaustion_is_a_clean_no_op():
     """The engine-facing contract in isolation: an alloc that cannot be
     satisfied raises MemoryError and changes nothing, so the scheduler

@@ -486,3 +486,52 @@ def test_optimistic_submit_rejects_never_admittable(stack):
     with pytest.raises(ValueError, match="never be admitted"):
         eng.submit(EngineRequest(rid=0, prompt=list(range(12)),
                                  sampling=SamplingParams(max_new=2)))
+
+
+def test_on_token_streams_at_step_boundaries(stack):
+    """`submit(req, on_token=...)` delivers every generated token exactly
+    once, in order, at the boundary of the step that produced it — and a
+    request without a callback costs nothing."""
+    from repro.serve.engine import ServeEngine as _SE
+    adapter = _adapter(stack, "bf16")
+    eng = _SE(adapter, n_pages=33, page_size=8, max_seqs=2,
+              prefill_chunk=4)
+    streamed: dict[int, list[int]] = {0: [], 2: []}
+    for rid, p in enumerate(PROMPTS):
+        cb = (lambda r, t: streamed[r].append(t)) if rid in streamed \
+            else None
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)),
+                   on_token=cb)
+    done = {}
+    while eng.queue or eng.active:
+        for r in eng.step():
+            done[r.rid] = r
+        # boundary contract: after each step, everything generated so
+        # far has been delivered — no buffering across steps
+        for req in eng.active:
+            if req.rid in streamed:
+                assert streamed[req.rid] == req.generated
+    for rid in streamed:
+        assert streamed[rid] == done[rid].generated
+        assert len(streamed[rid]) == MAX_NEW
+
+
+def test_release_scrubs_in_one_fused_dispatch(stack):
+    """Satellite: each request release batches its scrub into exactly ONE
+    fused dispatch (tallied as `scrub_state` in the kernels.ops counts),
+    regardless of how many pages it frees."""
+    from repro.kernels import ops as kops
+
+    def scrubs():
+        return sum(v for (entry, _), v in kops.dispatch_counts().items()
+                   if entry == "scrub_state")
+
+    adapter = _adapter(stack, "bf16")
+    eng, done = _engine_run(adapter, PROMPTS)
+    assert len(done) == len(PROMPTS)
+    kops.reset_dispatch_counts()
+    eng2, _ = _engine_run(adapter, PROMPTS)
+    # fault-free run, no sharing: one release — one scrub — per request
+    assert scrubs() == len(PROMPTS)
+    assert eng2.kv.pages_scrubbed >= len(PROMPTS)

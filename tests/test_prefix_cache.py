@@ -1,0 +1,339 @@
+"""Prefix-sharing radix cache: tree semantics, COW, eviction, accounting.
+
+Two layers. The radix-tree unit tests drive `RadixCache` against a
+`PagedKVCache` built over an *empty* kv pytree — scrub and COW become
+bookkeeping no-ops, so page-aligned insert/match/split/evict semantics
+and the refcount ownership contract are exercised at allocator speed.
+The engine integration tests then serve real shared-prefix traffic
+through `ServeEngine(prefix_cache=True)` and assert the user-visible
+promises: cached prefixes skip prefill work, generations stay
+bit-identical to the cache-off run, partial-page hits go through exactly
+one fused COW copy, the tree honours its page budget, replay accounting
+charges only recomputed tokens, and — under injected chaos — a page is
+scrubbed only at refcount 0, never under a surviving holder.
+"""
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.transformer import build_model
+from repro.serve.engine import (EngineRequest, FaultPlan, PagedKVCache,
+                                RadixCache, SamplingParams, ServeEngine,
+                                as_servable)
+
+PS = 4          # page size for the unit tests
+N_PAGES = 16
+
+
+def _kvc():
+    """KV bookkeeping with no device state: scrub/COW are no-ops."""
+    return PagedKVCache({}, N_PAGES, PS)
+
+
+def _tree(max_pages=None):
+    kvc = _kvc()
+    return RadixCache(kvc, max_pages), kvc.allocator, kvc
+
+
+# ----------------------------------------------------------------------
+# radix tree unit tests
+# ----------------------------------------------------------------------
+
+
+def test_empty_tree_matches_nothing():
+    tree, _, _ = _tree()
+    assert tree.match([1, 2, 3]) == ([], None)
+    assert tree.n_pages == 0 and tree.n_nodes == 0
+    assert tree.held_pages() == set()
+
+
+def test_insert_match_roundtrip():
+    tree, alloc, _ = _tree()
+    toks = list(range(100, 112))            # 3 pages of 4
+    pages = alloc.alloc(3)
+    assert tree.insert(toks, pages) == 3
+    assert tree.n_pages == 3 and tree.inserted_pages == 3
+    assert tree.held_pages() == set(pages)
+    assert alloc.in_use == 3                # ownership moved, not copied
+    # longer stream: full-run match, divergence past the cached edge
+    assert tree.match(toks + [7, 8]) == (pages, None)
+    # exact stream: full pages, no COW candidate
+    assert tree.match(list(toks)) == (pages, None)
+    # diverges 2 tokens into page 1: full page 0 + a COW peek at page 1
+    got, cow = tree.match(toks[:6] + [999] * 6)
+    assert got == pages[:1] and cow == (pages[1], 2)
+    # diverges inside page 0: nothing page-aligned to share
+    assert tree.match([999] + toks) == ([], None)
+
+
+def test_duplicate_insert_consumes_and_frees_the_copy():
+    tree, alloc, _ = _tree()
+    toks = list(range(12))
+    first = alloc.alloc(3)
+    tree.insert(toks, first)
+    dup = alloc.alloc(3)
+    assert tree.insert(toks, dup) == 0      # already cached: adopt nothing
+    assert alloc.in_use == 3                # dup refs consumed → freed
+    assert tree.n_pages == 3
+    assert tree.match(list(toks)) == (first, None)
+
+
+def test_page_boundary_split_branches_the_tree():
+    tree, alloc, _ = _tree()
+    a = list(range(12))
+    b = a[:8] + [50, 51, 52, 53]            # shares exactly 2 pages
+    pa, pb = alloc.alloc(3), alloc.alloc(3)
+    tree.insert(a, pa)
+    assert tree.insert(b, pb) == 1          # only the divergent page
+    assert alloc.in_use == 4                # b's two duplicate pages freed
+    assert tree.n_pages == 4 and tree.n_nodes == 3
+    assert tree.match(list(a)) == (pa, None)
+    assert tree.match(list(b)) == (pa[:2] + [pb[2]], None)
+
+
+def test_mid_page_divergence_keeps_only_the_aligned_prefix():
+    tree, alloc, _ = _tree()
+    a = list(range(12))
+    pa = alloc.alloc(3)
+    tree.insert(a, pa)
+    # shares 6 tokens = 1 page + half of the second: the remainder can't
+    # become a page-aligned sibling, so everything past page 0 is dropped
+    b = a[:6] + [70] * 6
+    pb = alloc.alloc(3)
+    assert tree.insert(b, pb) == 0
+    assert alloc.in_use == 3 and tree.n_pages == 3
+    got, cow = tree.match(list(b))
+    assert got == pa[:1] and cow == (pa[1], 2)
+
+
+def test_misaligned_insert_raises():
+    tree, alloc, _ = _tree()
+    pages = alloc.alloc(2)
+    with pytest.raises(ValueError, match="page-aligned"):
+        tree.insert(list(range(7)), pages)
+    alloc.free(pages)
+
+
+def test_lru_eviction_respects_budget():
+    tree, alloc, _ = _tree(max_pages=4)
+    a, b = list(range(12)), list(range(20, 32))
+    tree.insert(a, alloc.alloc(3))
+    pb = alloc.alloc(3)
+    tree.insert(b, pb)                      # over budget → evict LRU (a)
+    assert tree.n_pages <= 4
+    assert tree.evicted_pages == 2
+    assert tree.match(list(b)) == (pb, None)     # newest insert intact
+    assert len(tree.match(list(a))[0]) <= 1      # a's tail evicted
+    assert alloc.in_use == tree.n_pages          # evicted pages freed
+
+
+def test_evict_skips_pages_pinned_by_live_holders():
+    tree, alloc, kvc = _tree()
+    toks = list(range(12))
+    pages = alloc.alloc(3)
+    tree.insert(toks, pages)
+    alloc.incref([pages[1]])                # a live sequence shares page 1
+    assert tree.evict(3) == 1               # only the free tail goes
+    assert tree.n_pages == 2
+    assert tree.held_pages() == set(pages[:2])
+    assert alloc.refcount(pages[1]) == 2
+    assert tree.evict(3) == 0               # pinned page blocks the rest
+    kvc.deref([pages[1]])                   # holder lets go
+    assert tree.evict(3) == 2
+    assert tree.n_pages == 0 and alloc.in_use == 0
+
+
+def test_clear_releases_every_page():
+    tree, alloc, _ = _tree()
+    tree.insert(list(range(12)), alloc.alloc(3))
+    tree.insert(list(range(12))[:8] + [9, 9, 9, 9], alloc.alloc(3))
+    held = tree.n_pages
+    assert tree.clear() == held
+    assert tree.n_pages == 0 and tree.n_nodes == 0
+    assert alloc.in_use == 0
+    assert tree.match(list(range(12))) == ([], None)
+
+
+# ----------------------------------------------------------------------
+# engine integration
+# ----------------------------------------------------------------------
+
+MAX_NEW = 4
+SYS = [11, 23, 5, 81, 42, 17, 3, 64, 29, 90, 7, 55]     # 3 pages of 4
+SUFFIXES = [[101, 7, 33], [88, 12, 60, 4], [19, 2], [73, 41, 6, 5, 28]]
+GEOM = dict(n_pages=40, page_size=4, max_seqs=2, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def adapter():
+    cfg = get_config("llama3-1b").reduced()
+    model = build_model(cfg)
+    return as_servable(model, model.init(jax.random.PRNGKey(0)))
+
+
+def _submit(eng, prompts):
+    for rid, p in enumerate(prompts):
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)))
+
+
+def _run_checked(eng):
+    done = []
+    while eng.queue or eng.active:
+        done.extend(eng.step())
+        eng.check_books()
+    return {r.rid: r for r in done}
+
+
+def _counter(eng, name):
+    return eng.metrics.counter(name).value
+
+
+def _assert_drained_but_tree(eng):
+    """Quiescent engine: the only live references are the tree's."""
+    alloc = eng.kv.allocator
+    tree = eng.prefix_cache
+    assert not eng.kv.tables and not eng._committed
+    assert alloc.in_use == (tree.n_pages if tree else 0)
+    eng.check_books()
+    if tree:
+        tree.clear()
+    assert alloc.in_use == 0 and alloc.n_free == alloc.capacity
+
+
+@pytest.fixture(scope="module")
+def baseline(adapter):
+    """Cache-off greedy tokens + prefill cost for the shared workload."""
+    eng = ServeEngine(adapter, **GEOM)
+    _submit(eng, [SYS + s for s in SUFFIXES])
+    done = _run_checked(eng)
+    return ({r: done[r].generated for r in done},
+            _counter(eng, "engine.prefill_tokens"))
+
+
+def test_prefix_hits_skip_prefill_bit_identically(adapter, baseline):
+    """The headline promise: later requests sharing the system prefix
+    prefill only their divergent tail, generate the exact cache-off
+    tokens, and the saving shows up in the counters."""
+    base_toks, base_prefill = baseline
+    eng = ServeEngine(adapter, **GEOM, prefix_cache=True)
+    _submit(eng, [SYS + s for s in SUFFIXES])
+    done = _run_checked(eng)
+    for rid, toks in base_toks.items():
+        assert done[rid].generated == toks, rid
+    assert _counter(eng, "engine.prefix.hits") > 0
+    assert _counter(eng, "engine.prefix.hit_tokens") > 0
+    assert _counter(eng, "engine.prefill_tokens") < base_prefill
+    assert eng.prefix_cache.n_pages > 0
+    _assert_drained_but_tree(eng)
+
+
+def test_partial_page_hit_goes_through_one_cow_copy(adapter):
+    """A prompt that equals a cached stream's page-aligned prefix clamps
+    to len-1 (the last position must produce logits), landing mid-page:
+    exactly one fused COW copy, and the continuation matches a cold run."""
+    eng = ServeEngine(adapter, **GEOM, prefix_cache=True)
+    donor = SYS + SUFFIXES[0]
+    _submit(eng, [donor])
+    _run_checked(eng)
+    assert eng.prefix_cache.n_pages >= 2    # donated at finish
+    probe = list(SYS[:8])                   # 2 cached pages exactly
+    cold = ServeEngine(adapter, **GEOM)
+    cold.submit(EngineRequest(rid=0, prompt=list(probe),
+                              sampling=SamplingParams(max_new=MAX_NEW)))
+    want = _run_checked(cold)[0].generated
+    eng.submit(EngineRequest(rid=9, prompt=list(probe),
+                             sampling=SamplingParams(max_new=MAX_NEW)))
+    done = _run_checked(eng)
+    assert done[9].generated == want
+    assert _counter(eng, "engine.prefix.cow_copies") == 1
+    # clamp: 8 cached tokens available, 7 usable (last recomputed)
+    assert _counter(eng, "engine.prefix.hit_tokens") == 7
+    _assert_drained_but_tree(eng)
+
+
+def test_tree_honours_its_page_budget(adapter):
+    eng = ServeEngine(adapter, **GEOM, prefix_cache=True,
+                      prefix_cache_pages=2)
+    _submit(eng, [SYS + s for s in SUFFIXES])
+    _run_checked(eng)
+    assert eng.prefix_cache.n_pages <= 2
+    assert _counter(eng, "engine.prefix.evicted_pages") > 0
+    _assert_drained_but_tree(eng)
+
+
+@pytest.mark.chaos
+def test_replay_charges_only_recomputed_tokens(adapter):
+    """Satellite accounting fix: `engine.replayed_prefill_tokens` counts
+    the rows a replay *actually* recomputes. Fault-free runs charge
+    zero. A victim preempted mid-decode replays its whole stream with
+    the cache off, but with a warm tree (seeded by an identical earlier
+    request — greedy decoding makes its stream a prefix of the donated
+    one) the replay recomputes only what the tree cannot return. The
+    charge-at-preempt-time accounting this replaced billed the full
+    stream in both cases."""
+    prompt = SYS + SUFFIXES[0]
+    replayed, toks = {}, {}
+    for cache_on in (False, True):
+        eng = ServeEngine(adapter, **GEOM, prefix_cache=cache_on)
+        # warm request: with the cache on, donates its stream's pages
+        eng.submit(EngineRequest(rid=0, prompt=list(prompt),
+                                 sampling=SamplingParams(max_new=MAX_NEW)))
+        warm = _run_checked(eng)[0].generated
+        assert _counter(eng, "engine.replayed_prefill_tokens") == 0
+        donated = (eng.prefix_cache.n_pages if cache_on else 0) \
+            * GEOM["page_size"]
+        b = EngineRequest(rid=1, prompt=list(prompt),
+                          sampling=SamplingParams(max_new=MAX_NEW))
+        eng.submit(b)
+        while len(b.generated) < 2:         # decode to a known point
+            eng.step()
+            eng.check_books()
+        eng._preempt(b)
+        eng.check_books()
+        done = _run_checked(eng)
+        assert done[1].generated == warm    # replay continued exactly
+        toks[cache_on] = warm
+        stream = len(prompt) + 2            # prompt + generated at preempt
+        # the replay prefills from the tree hit (clamped: the last
+        # position always recomputes) to the end of the stream
+        expect = stream - min(donated, stream - 1)
+        assert _counter(eng, "engine.preemptions") == 1
+        assert _counter(eng, "engine.replayed_prefill_tokens") == expect, \
+            (cache_on, donated)
+        replayed[cache_on] = expect
+        _assert_drained_but_tree(eng)
+    assert toks[True] == toks[False]
+    assert replayed[False] == len(prompt) + 2   # whole stream recomputed
+    assert 0 < replayed[True] < replayed[False]
+
+
+@pytest.mark.chaos
+def test_chaos_sharing_never_scrubs_a_referenced_page(adapter, baseline):
+    """Preemption + eviction under sharing: every page handed to the
+    fused scrub has refcount 0 at that moment (scrubbing a still-shared
+    page would corrupt every surviving holder), and the chaos run's
+    tokens stay bit-identical to the undisturbed baseline."""
+    base_toks, _ = baseline
+    scrubbed = []
+    for seed in (1, 2, 3):
+        eng = ServeEngine(adapter, n_pages=14, page_size=4, max_seqs=2,
+                          prefill_chunk=4, prefix_cache=True,
+                          max_preemptions=10,
+                          faults=FaultPlan(seed=seed, exhaust_rate=0.3))
+        orig = eng.kv.scrub
+
+        def guard(pages, slot, _orig=orig, _eng=eng):
+            for p in pages:
+                assert _eng.kv.allocator.refcount(p) == 0, \
+                    f"scrub of live page {p}"
+            scrubbed.extend(pages)
+            return _orig(pages, slot)
+
+        eng.kv.scrub = guard
+        _submit(eng, [SYS + s for s in SUFFIXES])
+        done = _run_checked(eng)
+        for rid, toks in base_toks.items():
+            assert done[rid].generated == toks, (seed, rid)
+        _assert_drained_but_tree(eng)
+    assert scrubbed        # the guard actually saw traffic
