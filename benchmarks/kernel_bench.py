@@ -191,6 +191,58 @@ def paged_attention_bench(*, smoke: bool, iters: int = 5):
     return rows
 
 
+def swap_io_bench(*, smoke: bool, iters: int = 5):
+    """Host<->device swap-tier page I/O: the fused gather+device_get
+    (swap-out) and device_put+scatter (swap-in) round trip the tiered
+    paging engine pays per evicted page, as a measured bandwidth.
+
+    A synthetic `PagedKVCache` with an attached host pool swaps one
+    sequence's pages out and back per cycle; the first cycle compiles
+    both fused dispatches and is discarded. The bytes/cycle is the
+    per-direction payload (`pages · page_bytes`) — the quantity the
+    scheduler's swap-vs-replay cost rule weighs against replayed
+    prefill tokens.
+    """
+    from repro.serve.engine.pages import PagedKVCache
+
+    nl, kh, dh = (2, 2, 64) if smoke else (4, 8, 128)
+    page_size, n_pages, pages_move = 16, 32, 8
+    rng = np.random.default_rng(0)
+    kv = {"k": jnp.asarray(rng.standard_normal(
+              (nl, n_pages, page_size, kh, dh)), jnp.float32),
+          "v": jnp.asarray(rng.standard_normal(
+              (nl, n_pages, page_size, kh, dh)), jnp.float32)}
+    cache = PagedKVCache(kv, n_pages, page_size, n_slots=2)
+    cache.attach_host_pool(64)
+    rid = 0
+    cache.tables[rid] = cache.allocator.alloc(pages_move)
+
+    cache.swap_out(rid)          # compile both fused dispatches
+    cache.swap_in(rid)
+    t_out = t_in = 0.0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _, nbytes = cache.swap_out(rid)
+        t_out += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cache.swap_in(rid)
+        jax.tree.leaves(cache.state["kv"])[0].block_until_ready()
+        t_in += time.perf_counter() - t0
+
+    rows = []
+    print("op,pages,bytes_per_cycle,us_per_cycle,gib_per_s")
+    for label, wall in (("swap_out_io", t_out), ("swap_in_io", t_in)):
+        us = wall / iters * 1e6
+        rows.append({
+            "op": label, "pages": pages_move, "bytes_per_cycle": nbytes,
+            "us_per_cycle": round(us, 1),
+            "gib_per_s": round(nbytes / (wall / iters) / 2 ** 30, 3),
+        })
+        print(f"{label},{pages_move},{nbytes},{us:.1f},"
+              f"{rows[-1]['gib_per_s']}")
+    return rows
+
+
 # required measurement fields per op family — `_check_schema` refuses to
 # append a history row that lost one (mirrors serve_bench's row check)
 _ROW_FIELDS = {
@@ -203,6 +255,7 @@ _ROW_FIELDS = {
                         "page_size", "batch", "pages_per_step",
                         "us_per_step"),
     "decode": ("decode_step_us",),
+    "swap": ("pages", "bytes_per_cycle", "us_per_cycle", "gib_per_s"),
 }
 
 
@@ -241,6 +294,7 @@ def main(argv=None):
         rows += hadamard_rows()
     rows += paged_attention_bench(smoke=args.smoke)
     rows += decode_step_bench()
+    rows += swap_io_bench(smoke=args.smoke)
 
     out = {
         "bench": "kernels",

@@ -21,6 +21,13 @@ the radix prefix cache off and on (`engine_prefix_off` /
 ≥50% fewer prefill tokens computed, a nonzero hit-rate, and greedy
 tokens bit-identical between the two runs.
 
+A pressured tiered-paging trace (`engine_swap_recompute` /
+`engine_swap_swap` rows) evicts a long-running resident under page
+pressure through both recovery modes — preempt-and-replay vs
+swap-to-host — and asserts before writing: the swap mode replays
+strictly fewer prefill tokens, shows lower admission-wait p95, and both
+modes produce greedy tokens bit-identical to an unpressured baseline.
+
 Every path is warmed up on the same scheduler/engine object first, so the
 numbers measure steady-state scheduling + forward cost, not jit tracing.
 On this CPU host the interpret-mode kernel overhead dominates the integer
@@ -211,6 +218,126 @@ def bench_burst(adapter, *, n_tenants, prompt_len, max_new, page_size,
             f"peak_util {opt['peak_util']} vs {res['peak_util']}, "
             f"wait p95 {opt['admission_wait_p95_ms']}ms vs "
             f"{res['admission_wait_p95_ms']}ms")
+    return rows
+
+
+def bench_swap(adapter, *, vocab, seed=13):
+    """Tiered-paging trace: swap-to-host vs recompute-by-replay under
+    identical page pressure.
+
+    Two long residents decode against a pool sized so their combined
+    growth must evict one of them; two short requests then arrive and
+    wait for seats. The recompute mode (no host tier) preempts the
+    victim and replays its whole `prompt + generated` stream; the swap
+    mode parks the victim's pages in an 8 MiB host tier and patches them
+    back, replaying nothing. Both runs — and an unpressured baseline
+    with room for all four worst cases — must produce bit-identical
+    greedy tokens; the recorded (and asserted) win is fewer replayed
+    prefill tokens AND lower admission-wait p95 for the swap mode, both
+    off the validated registry snapshot.
+    """
+    from repro.serve.engine import (EngineRequest, SamplingParams,
+                                    ServeEngine, pages_for)
+    from repro.serve.telemetry import validate_snapshot
+
+    long_len, short_len, max_new = 60, 6, 8
+    page_size, n_pages = 8, 18       # 17 usable < 2 pressured worst cases
+    rng = np.random.default_rng(seed)
+    longs = [rng.integers(0, vocab, size=long_len).tolist()
+             for _ in range(2)]
+    shorts = [rng.integers(0, vocab, size=short_len).tolist()
+              for _ in range(2)]
+
+    def make_req(rid, prompt):
+        return EngineRequest(rid=rid, prompt=list(prompt),
+                             sampling=SamplingParams(max_new=max_new))
+
+    def run_round(eng, base):
+        """Longs decode until pressure evicts one (swap or preempt,
+        depending on the engine's mode), then the shorts arrive."""
+        eng.reset_metrics()
+        c = eng.metrics
+
+        def evictions():
+            return (c.counter("engine.preemptions").value
+                    + c.counter("engine.swap.out").value)
+
+        done: list = []
+        t0 = time.perf_counter()
+        for i, p in enumerate(longs):
+            eng.submit(make_req(base + i, p))
+        while evictions() == 0 and (eng.queue or eng.active):
+            done.extend(eng.step())
+            eng.check_books()
+        for i, p in enumerate(shorts):
+            eng.submit(make_req(base + 2 + i, p))
+        done.extend(eng.run())
+        eng.check_books()
+        wall = time.perf_counter() - t0
+        return {r.rid - base: list(r.generated) for r in done}, wall
+
+    rows = []
+    outs_by_mode = {}
+    for mode, kw in (("recompute", dict(swap_policy="never")),
+                     ("swap", dict(swap_host_mb=8.0, swap_policy="always"))):
+        eng = ServeEngine(adapter, n_pages=n_pages, page_size=page_size,
+                          max_seqs=2, prefill_chunk=8, token_budget=64,
+                          headroom_pages=0, max_preemptions=10, **kw)
+        run_round(eng, 100)       # warmup: compile every path incl. swap
+        outs, wall = run_round(eng, 0)
+        snap = eng.metrics_snapshot()
+        validate_snapshot(snap)
+        c, h = snap["counters"], snap["histograms"]
+        outs_by_mode[mode] = outs
+        rows.append({
+            "path": f"engine_swap_{mode}",
+            "family": "dense",
+            "tokens_per_s": round(c["engine.generated_tokens"] / wall, 2),
+            "gen_tokens": c["engine.generated_tokens"],
+            "wall_s": round(wall, 3),
+            "preemptions": c["engine.preemptions"],
+            "replayed_prefill_tokens": c["engine.replayed_prefill_tokens"],
+            "swap_out": c["engine.swap.out"],
+            "swap_in": c["engine.swap.in"],
+            "swap_bytes": c["engine.swap.bytes"],
+            "swap_retries": c["engine.swap.retries"],
+            "swap_fallbacks": c["engine.swap.fallbacks"],
+            "admission_wait_p95_ms": round(
+                (h["engine.admission.wait_s"]["p95"] or 0.0) * 1e3, 3),
+        })
+
+    # unpressured baseline: every request fits its worst case, so no
+    # eviction of any kind — the greedy tokens both pressured modes must
+    # reproduce exactly
+    base_pages = 4 * pages_for(long_len + max_new, page_size) + 1
+    eng = ServeEngine(adapter, n_pages=base_pages, page_size=page_size,
+                      max_seqs=4, prefill_chunk=8, token_budget=64)
+    for i, p in enumerate(longs + shorts):
+        eng.submit(make_req(i, p))
+    base_outs = {r.rid: list(r.generated) for r in eng.run()}
+
+    for mode, outs in outs_by_mode.items():
+        if outs != base_outs:
+            raise SystemExit(
+                f"{mode} mode perturbed greedy tokens under pressure: "
+                + "; ".join(f"rid{r}: {outs.get(r)} != {base_outs[r]}"
+                            for r in base_outs
+                            if outs.get(r) != base_outs[r]))
+    rec, sw = rows
+    if not (rec["preemptions"] >= 1 and sw["swap_out"] >= 1
+            and sw["swap_in"] >= 1):
+        raise SystemExit(
+            "swap trace never hit pressure: "
+            f"recompute preemptions {rec['preemptions']}, "
+            f"swap out/in {sw['swap_out']}/{sw['swap_in']}")
+    if not (sw["replayed_prefill_tokens"] < rec["replayed_prefill_tokens"]
+            and sw["admission_wait_p95_ms"] < rec["admission_wait_p95_ms"]):
+        raise SystemExit(
+            "pressured trace did not show the swap-tier win: "
+            f"replayed tokens {sw['replayed_prefill_tokens']} vs "
+            f"{rec['replayed_prefill_tokens']}, wait p95 "
+            f"{sw['admission_wait_p95_ms']}ms vs "
+            f"{rec['admission_wait_p95_ms']}ms")
     return rows
 
 
@@ -516,6 +643,13 @@ def main(argv=None):
     for row in bench_burst(as_servable(model, params), n_tenants=4,
                            prompt_len=8, max_new=8 if args.smoke else 16,
                            page_size=8, vocab=cfg.vocab):
+        rows.append(row)
+        print(",".join(str(row[k]) for k in row))
+
+    # tiered-paging trace: swap-to-host vs recompute-by-replay under the
+    # same pressure — asserts zero-replay re-admission, lower admission
+    # wait, and bit-identical tokens vs an unpressured baseline
+    for row in bench_swap(as_servable(model, params), vocab=cfg.vocab):
         rows.append(row)
         print(",".join(str(row[k]) for k in row))
 

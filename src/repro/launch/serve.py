@@ -21,6 +21,11 @@ the LRU tree), and `--shared-prefix N` prepends one N-token system
 prompt to every request to exercise it; the run summary then reports the
 prefix hit-rate.
 
+`--swap-host-mb MB` attaches a host KV swap tier (`--swap-policy
+{never,cost,always}` picks when swap beats recompute-by-replay under
+page pressure), and `--drain-after N` exercises graceful shutdown:
+after N steps admission stops and the engine drains every tier empty.
+
 Observability: `--metrics-json PATH` writes the engine's schema-validated
 registry snapshot, `--trace PATH` records request lifecycles and fused
 dispatches as Chrome Trace JSON (open in https://ui.perfetto.dev), and
@@ -73,6 +78,12 @@ def summary_line(snap: dict) -> str:
                 f"{c['engine.prefix.hits'] / lookups:.0%} "
                 f"({c['engine.prefix.hit_tokens']} tokens, "
                 f"{c['engine.prefix.cow_copies']} COW)")
+    if c["engine.swap.out"] or c["engine.swap.in"] or c["engine.swap.fallbacks"]:
+        out += (f" | swap out {c['engine.swap.out']} "
+                f"in {c['engine.swap.in']} "
+                f"({c['engine.swap.bytes'] / 2**20:.1f} MiB, "
+                f"{c['engine.swap.retries']} retries, "
+                f"{c['engine.swap.fallbacks']} fallbacks)")
     out += (f" | preempt {c['engine.preemptions']} "
             f"cancel {c['engine.requests.cancelled']} "
             f"expire {c['engine.requests.expired']} "
@@ -131,6 +142,21 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                     "request (exercises the prefix cache)")
+    ap.add_argument("--swap-host-mb", type=float, default=None, metavar="MB",
+                    help="attach a host KV swap tier of this many MiB: "
+                    "under page pressure the engine may swap a victim's "
+                    "pages to host instead of preempting it for recompute")
+    ap.add_argument("--swap-policy", default="cost",
+                    choices=["never", "cost", "always"],
+                    help="when to prefer swap over recompute-by-replay "
+                    "under pressure: cost-model the round-trip bytes vs "
+                    "replayed tokens (default), always swap, or never "
+                    "(preempt only; implied without --swap-host-mb)")
+    ap.add_argument("--drain-after", type=int, default=None, metavar="N",
+                    help="after N engine steps stop admission and drain: "
+                    "never-admitted requests cancel, in-flight work "
+                    "(including swapped residents) finishes, and the "
+                    "engine asserts every tier came back empty")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -174,6 +200,9 @@ def main(argv=None):
         if args.prefix_cache:
             raise SystemExit("--prefix-cache is a paged-engine feature; "
                              "drop --legacy-scheduler")
+        if args.swap_host_mb is not None or args.drain_after is not None:
+            raise SystemExit("--swap-host-mb/--drain-after are paged-"
+                             "engine features; drop --legacy-scheduler")
         sched = BatchScheduler(smodel, sparams, slots=args.slots,
                                max_len=args.max_len,
                                temperature=args.temperature)
@@ -218,6 +247,8 @@ def main(argv=None):
                          max_context=args.max_len,
                          prefix_cache=args.prefix_cache,
                          prefix_cache_pages=args.prefix_cache_pages,
+                         swap_host_mb=args.swap_host_mb,
+                         swap_policy=args.swap_policy,
                          tracer=tracer, quality_probes=probes)
     for rid, prompt in enumerate(prompts):
         engine.submit(EngineRequest(
@@ -225,7 +256,14 @@ def main(argv=None):
             sampling=SamplingParams(temperature=args.temperature,
                                     max_new=args.max_new,
                                     top_k=args.top_k, top_p=args.top_p)))
-    done = engine.run()
+    if args.drain_after is not None:
+        done = []
+        while (engine.queue or engine.active) \
+                and engine.n_steps < args.drain_after:
+            done.extend(engine.step())
+        done.extend(engine.drain())
+    else:
+        done = engine.run()
     print(f"{label}: served {len(done)} requests over {args.slots} slots "
           f"in {engine.n_steps} engine steps "
           f"({engine.n_prefill_tokens} prefill + "

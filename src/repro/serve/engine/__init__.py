@@ -43,14 +43,35 @@ the matched length so prefill begins at the divergence offset, and a
 preempted victim's shared pages are unpinned, never scrubbed. Register
 slots stay excluded from sharing: SSM state is position-dependent.
 Tokens can stream per request via `submit(req, on_token=...)`,
-delivered at step boundaries. See each module's docstring for the
-design.
+delivered at step boundaries.
+
+**Tiered residency** (`swap_host_mb`, kv-only specs) adds a host memory
+tier under the device pool: each block-table entry is device-resident
+(an `int` page id — the only residency kernels ever see), host-resident
+(a `pages.HostPageRef` naming a slot of the `pages.HostSwapPool` numpy
+mirror), or in-flight (inside a swap transfer window, asserted
+untouchable by scrub/COW). Under page pressure `_handle_exhaustion`
+applies the swap-vs-replay cost rule per victim: swap out when the
+round-trip bytes (`2 · pages · page_bytes` — 4-8x smaller for the
+quantized int4/int8 page formats) undercut the replay's re-prefill
+tokens at the configured break-even rate, within the host budget;
+otherwise preempt for recompute. Only *exclusively-held* pages move —
+radix-shared pages keep the victim's reference and stay device-resident,
+so a shared page swaps at most once and a COW source is never
+host-resident. A swapped victim re-admits by swapping in (block-table
+row patched in place, zero recomputed tokens, bit-identical
+continuation); swap I/O failures (injectable: `faults.SwapFault`) retry
+with exponential backoff, then degrade to recompute-by-replay, then —
+past the preemption bound — terminal `failed`. `ServeEngine.drain()`
+closes the loop: admission stops, in-flight work (including swapped
+residents) finishes, and every tier must come back empty. See each
+module's docstring for the design.
 """
 from .adapter import (DenseModelAdapter, IntegerModelAdapter, ServableModel,
                       StateSpec, as_servable, derive_state_spec)
-from .faults import DispatchFault, FaultPlan
-from .pages import (PageAllocator, PagedKVCache, RegisterAllocator,
-                    pages_for)
+from .faults import DispatchFault, FaultPlan, SwapFault
+from .pages import (HostPageRef, HostSwapPool, PageAllocator, PagedKVCache,
+                    RegisterAllocator, pages_for)
 from .radix import RadixCache, RadixNode
 from .scheduler import (EngineRequest, EngineStalledError, SamplingParams,
                         ServeEngine)
@@ -60,5 +81,6 @@ __all__ = [
     "IntegerModelAdapter", "as_servable", "PageAllocator",
     "RegisterAllocator", "PagedKVCache", "pages_for", "EngineRequest",
     "EngineStalledError", "SamplingParams", "ServeEngine", "FaultPlan",
-    "DispatchFault", "RadixCache", "RadixNode",
+    "DispatchFault", "SwapFault", "RadixCache", "RadixNode",
+    "HostPageRef", "HostSwapPool",
 ]

@@ -16,7 +16,11 @@ about at well-defined points of each `step()`:
   * **lifecycle chaos** — `cancels_due(step, live)` / `expiries_due(
     step, live)` name requests the scheduler must cancel or force-expire
     at the top of that step, combining explicit `{step: (rid, ...)}`
-    schedules with seeded random picks from the live set.
+    schedules with seeded random picks from the live set;
+  * **swap I/O faults** — `take_swap_fault(step)` fails the step's
+    first host<->device page transfer with `SwapFault` *before* any
+    pool or ledger mutation, driving the scheduler's retry-with-backoff
+    and fall-back-to-recompute degradation paths.
 
 Determinism contract: every random decision is drawn from
 `numpy.random.default_rng((seed, salt, step))` — a pure function of the
@@ -45,6 +49,12 @@ class DispatchFault(RuntimeError):
     before the dispatch launches, so no engine state was touched)."""
 
 
+class SwapFault(RuntimeError):
+    """Injected failure of a host<->device page-swap transfer (raised
+    before any pool or ledger mutation, so the scheduler can retry the
+    swap with backoff or fall back to recompute-by-replay)."""
+
+
 @dataclasses.dataclass
 class FaultPlan:
     """Seedable, deterministic fault schedule for one engine run.
@@ -71,13 +81,30 @@ class FaultPlan:
     expire_at: dict[int, tuple[int, ...]] = dataclasses.field(
         default_factory=dict)
     expire_rate: float = 0.0
+    # swap I/O faults: fail the step's first host<->device page transfer
+    swap_fail_steps: tuple[int, ...] = ()
+    swap_fail_rate: float = 0.0
 
     def __post_init__(self):
         for name in ("exhaust_rate", "dispatch_fail_rate", "cancel_rate",
-                     "expire_rate"):
+                     "expire_rate", "swap_fail_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.dispatch_delay_s < 0:
+            raise ValueError(f"dispatch_delay_s must be >= 0, "
+                             f"got {self.dispatch_delay_s}")
+        for name in ("exhaust_steps", "dispatch_fail_steps",
+                     "dispatch_delay_steps", "swap_fail_steps"):
+            bad = [s for s in getattr(self, name) if s < 0]
+            if bad:
+                raise ValueError(
+                    f"{name} has negative step index(es) {bad}")
+        for name in ("cancel_at", "expire_at"):
+            bad = [s for s in getattr(self, name) if s < 0]
+            if bad:
+                raise ValueError(
+                    f"{name} has negative step index(es) {bad}")
         # at-most-once-per-step latches for the raising injections
         self._fired: set[tuple[str, int]] = set()
 
@@ -113,6 +140,17 @@ class FaultPlan:
         if step in self.dispatch_delay_steps:
             return "delay" if self._once("dispatch", step) else None
         return None
+
+    def take_swap_fault(self, step: int) -> bool:
+        """True exactly once for a step whose first swap transfer should
+        fail. The latch is shared across directions: whichever of
+        swap-out / swap-in the scheduler attempts first that step takes
+        the `SwapFault`; retries within the same step see a healthy
+        tier, mirroring a transient host-I/O hiccup."""
+        due = step in self.swap_fail_steps or (
+            self.swap_fail_rate > 0
+            and self._rng(5, step).random() < self.swap_fail_rate)
+        return due and self._once("swap", step)
 
     def _lifecycle(self, step: int, live: list[int], at: dict, rate: float,
                    salt: int) -> list[int]:

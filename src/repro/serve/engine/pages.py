@@ -63,18 +63,50 @@ always has exactly one owner and is scrubbed on every release.
 The same `release()`/`scrub()` path serves normal completion,
 cancellation, and preemption — a preempted victim's shared pages are
 simply unpinned (deref'd, never scrubbed) while its exclusive pages are
-zeroed and returned; its state is recomputed later by replaying the
-host-known token stream, so the allocator never needs a swap-out notion.
-`release(rid, adopted=k)` lets the prefix tree take over the request's
-reference on its first `k` pages instead of dropping them. `alloc()`
-validates before mutating: `MemoryError` on exhaustion leaves the free
-list untouched, which is what lets the scheduler evict cached prefixes
-or preempt a victim and simply retry. Each release scrubs through ONE
-fused jit dispatch (pages of every kv leaf + the register slot together,
-page counts padded to powers of two to bound the jit variants), tallied
-as `scrub_state` in the `kernels.ops` dispatch counts. The legacy
-`gather_pages` / `scatter_*_rows` primitives survive purely as the test
-oracle the paged kernel is checked against.
+zeroed and returned; its state is either recomputed later by replaying
+the host-known token stream, or parked in the **host swap tier** (below)
+and copied back at re-admission. `release(rid, adopted=k)` lets the
+prefix tree take over the request's reference on its first `k` pages
+instead of dropping them. `alloc()` validates before mutating:
+`MemoryError` on exhaustion leaves the free list untouched, which is
+what lets the scheduler evict cached prefixes or preempt a victim and
+simply retry. Each release scrubs through ONE fused jit dispatch (pages
+of every kv leaf + the register slot together, page counts padded to
+powers of two to bound the jit variants), tallied as `scrub_state` in
+the `kernels.ops` dispatch counts. The legacy `gather_pages` /
+`scatter_*_rows` primitives survive purely as the test oracle the paged
+kernel is checked against.
+
+**Two-tier residency.** When a `HostSwapPool` is attached (an
+engine-configured host-memory budget, `--swap-host-mb`), a KV page has
+one of three residencies:
+
+  * **device** — a plain `int` page id in the block table, readable by
+    every fused dispatch; the only residency the kernels ever see.
+  * **host** — a `HostPageRef` table entry naming a slot of the pool's
+    numpy mirror (one buffer per kv leaf, shaped like the device pool
+    with the page axis sized to the budget). The device copy was
+    scrubbed and returned to the allocator; the bytes live only on host.
+  * **in-flight** — a device page id currently inside a swap transfer
+    window (`PagedKVCache._inflight`). Scrub and copy-on-write assert
+    against touching it, so a transfer can never race state maintenance.
+
+`swap_out(rid)` moves exactly the victim's *exclusively-held* device
+pages (refcount 1) to host slots — one fused gather dispatch + one
+`device_get`, tallied as `swap_out` — then derefs them so the device
+copies scrub and return to the pool. Shared pages (radix tree or sibling
+sequences hold references) keep the victim's reference and stay device
+resident: a radix-shared page is therefore swapped at most once — in
+practice never, because tree-held prefixes are live device state other
+sequences still read — and a copy-on-write source is always device
+resident, never a `HostPageRef`. `swap_in(rid, alloc_fn)` allocates
+fresh device pages first (so `MemoryError` mutates nothing), copies the
+host slots back through one `device_put` + fused scatter (`swap_in`),
+patches the block-table row in place, and releases the host slots. The
+bytes moved per page (`page_bytes`, from the adapter's state-spec
+dtypes) are what the scheduler's swap-vs-replay cost rule weighs against
+re-prefill tokens — quantized int4/int8 KV pages cost 4-8x less traffic
+per page than bf16, which is exactly what tips the rule toward swap.
 
 Page 0 / slot 0 are reserved as scratch: padded batch rows (inactive
 slots) and padded block-table entries point at them, so their masked
@@ -83,10 +115,11 @@ also what makes scratch-padded scrub index vectors harmless).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
@@ -130,6 +163,113 @@ def _cow_impl(state: Params, src: jnp.ndarray, dst: jnp.ndarray) -> Params:
         lambda a: a.at[:, dst].set(
             jax.lax.dynamic_index_in_dim(a, src, axis=1, keepdims=False)),
         state["kv"]), "register": state["register"]}
+
+
+def _swap_gather_impl(state: Params, page_idx: jnp.ndarray) -> Params:
+    """Gather `page_idx` rows of every kv leaf into contiguous blocks —
+    the device half of swap-out, fused into one dispatch so a victim's
+    whole page set leaves in a single `device_get`. `page_idx` may be
+    scratch-padded (the extra rows are sliced off host-side)."""
+    return jax.tree.map(lambda a: a[:, page_idx], state["kv"])
+
+
+def _swap_scatter_impl(state: Params, blocks: Params,
+                       page_idx: jnp.ndarray) -> Params:
+    """Scatter host blocks back into `page_idx` rows of every kv leaf —
+    the device half of swap-in, one fused dispatch over a single
+    `device_put`. Pad entries target the scratch page with zero blocks
+    (dead writes by the scratch contract)."""
+    return {"kv": jax.tree.map(
+        lambda a, b: a.at[:, page_idx].set(b.astype(a.dtype)),
+        state["kv"], blocks), "register": state["register"]}
+
+
+class HostPageRef:
+    """Block-table entry for a host-resident page: names a slot of the
+    `HostSwapPool` mirror instead of a device page id. Kernels never see
+    one — `block_table_array` refuses to serialize a table holding any —
+    so a sequence with host-resident pages must swap in before dispatch.
+    """
+
+    __slots__ = ("slot",)
+
+    def __init__(self, slot: int):
+        self.slot = slot
+
+    def __repr__(self):
+        return f"HostPageRef({self.slot})"
+
+
+class HostSwapPool:
+    """Host-memory mirror of the device kv page pool — the swap tier.
+
+    One numpy buffer per kv leaf, shaped like the device pool with the
+    page axis resized to the budget: `[n_layers, n_slots, page_size,
+    ...]`. Capacity is derived from a byte budget and the per-page byte
+    cost of the adapter's state spec (quantized page formats shrink it
+    4-8x, which is what makes offload cheaper than recompute). Slots are
+    a plain free list — host pages are never shared (only exclusively
+    held device pages are ever swapped out), so there is no refcounting
+    and no scratch slot on this tier.
+    """
+
+    def __init__(self, kv_template: Params, budget_bytes: int):
+        if budget_bytes < 0:
+            raise ValueError("host swap budget must be >= 0 bytes")
+        leaves = jax.tree.leaves(kv_template)
+        self.page_bytes = sum(
+            a.shape[0] * int(np.prod(a.shape[2:], dtype=np.int64))
+            * np.dtype(a.dtype).itemsize for a in leaves)
+        self.capacity = (int(budget_bytes // self.page_bytes)
+                         if self.page_bytes else 0)
+        self.buf = jax.tree.map(
+            lambda a: np.zeros((a.shape[0], self.capacity) + tuple(a.shape[2:]),
+                               np.dtype(a.dtype)), kv_template)
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self._free_set = set(self._free)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def take(self, n: int) -> list[int]:
+        """Claim `n` host slots (validated before mutating, like
+        `PageAllocator.alloc`: `MemoryError` leaves the free list whole)."""
+        if n > len(self._free):
+            raise MemoryError(f"host swap tier exhausted: need {n}, "
+                              f"free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
+
+    def store(self, slots: list[int], blocks: Params):
+        """Copy gathered page blocks (`[n_layers, len(slots), ...]` per
+        leaf, already on host) into the claimed slots."""
+        idx = np.asarray(slots, np.int64)
+        for buf, b in zip(jax.tree.leaves(self.buf),
+                          jax.tree.leaves(blocks)):
+            buf[:, idx] = b
+
+    def load(self, slots: list[int]) -> Params:
+        """Read the slots back as contiguous blocks (numpy views stacked
+        per leaf), ready for one `device_put`."""
+        idx = np.asarray(slots, np.int64)
+        return jax.tree.map(lambda buf: buf[:, idx], self.buf)
+
+    def release(self, slots: list[int]):
+        """Return slots to the free list (validated as a batch first)."""
+        batch = set()
+        for s in slots:
+            if s < 0 or s >= self.capacity or s in self._free_set \
+                    or s in batch:
+                raise ValueError(f"double/invalid release of host slot {s}")
+            batch.add(s)
+        self._free.extend(slots)
+        self._free_set.update(slots)
 
 
 class PageAllocator:
@@ -343,21 +483,40 @@ class PagedKVCache:
         self.state = state
         self.page_size = page_size
         self.allocator = PageAllocator(n_pages)
-        self.tables: dict[int, list[int]] = {}
+        # table entries are device page ids (int) or HostPageRef — the
+        # per-page residency ledger lives in the tables themselves
+        self.tables: dict[int, list[int | HostPageRef]] = {}
         self.has_register = bool(jax.tree.leaves(state["register"]))
         self.registers = RegisterAllocator(n_slots) if self.has_register \
             else None
         self.slots: dict[int, int] = {}
+        # host swap tier: absent until the engine attaches a budget
+        self.host_pool: HostSwapPool | None = None
+        # device page ids inside a swap-transfer window right now; scrub
+        # and cow assert against touching them
+        self._inflight: set[int] = set()
+        # bytes one page costs across every kv leaf (the swap cost unit)
+        self.page_bytes = sum(
+            a.shape[0] * int(np.prod(a.shape[2:], dtype=np.int64))
+            * np.dtype(a.dtype).itemsize
+            for a in jax.tree.leaves(state["kv"]))
         # telemetry: release-time scrub totals (pages / register slots
-        # zeroed), mirrored into the metrics snapshot as gauges
+        # zeroed) and swap traffic, mirrored into the metrics snapshot
         self.pages_scrubbed = 0
         self.slots_scrubbed = 0
+        self.pages_swapped_out = 0
+        self.pages_swapped_in = 0
         # fused state-maintenance dispatches, compiled once per padded
         # page-count (scrub) and once at all (cow); both donate the state
         # so a pool sized to fill HBM never needs a second live copy
         self._scrub_jit = jax.jit(_scrub_impl, donate_argnums=(0,),
                                   static_argnames=("do_slot",))
         self._cow_jit = jax.jit(_cow_impl, donate_argnums=(0,))
+        # swap transfers: the gather reads (state survives for the deref
+        # that follows), the scatter donates like scrub
+        self._swap_gather_jit = jax.jit(_swap_gather_impl)
+        self._swap_scatter_jit = jax.jit(_swap_scatter_impl,
+                                         donate_argnums=(0,))
 
     @property
     def pool(self) -> Params:
@@ -386,10 +545,17 @@ class PagedKVCache:
         table entries' references were taken over by another holder (the
         radix prefix tree) and are skipped; the rest are deref'd, and
         only pages that dropped to refcount 0 are scrubbed — together
-        with the register slot — in one fused dispatch."""
-        pages = self.tables.pop(rid)
+        with the register slot — in one fused dispatch. Host-resident
+        entries (a swapped-out sequence being cancelled, expired, or
+        degraded to replay) have no device reference: their host slots
+        are simply returned to the swap tier."""
+        entries = self.tables.pop(rid)[adopted:]
         slot = self.slots.pop(rid, None)
-        self.deref(pages[adopted:], slot)
+        self.deref([p for p in entries if isinstance(p, int)], slot)
+        host_slots = [e.slot for e in entries
+                      if isinstance(e, HostPageRef)]
+        if host_slots:
+            self.host_pool.release(host_slots)
         if slot is not None:
             self.registers.free(slot)
 
@@ -420,6 +586,11 @@ class PagedKVCache:
         the jit variant count stays bounded); the whole call is tallied
         as one `scrub_state` dispatch in the `kernels.ops` counts.
         """
+        bad = set(pages) & self._inflight
+        assert not bad, f"scrub of in-flight swap page(s) {sorted(bad)}"
+        for p in pages:
+            assert self.allocator.refcount(p) == 0, \
+                f"scrub of still-referenced page {p}"
         has_kv = bool(pages) and bool(jax.tree.leaves(self.state["kv"]))
         do_slot = slot is not None \
             and bool(jax.tree.leaves(self.state["register"]))
@@ -444,10 +615,130 @@ class PagedKVCache:
         across every kv leaf in one fused dispatch (tallied as
         `cow_page_copy`). The caller owns `dst` exclusively and may then
         overwrite rows past the shared prefix without perturbing `src`'s
-        other holders."""
+        other holders. Both ends must be live device pages: a host
+        resident page has no device id at all, so a `HostPageRef` can
+        never reach here — the asserts pin the residency contract (COW
+        never targets a swapped or in-flight source)."""
+        assert src not in self._inflight and dst not in self._inflight, \
+            f"cow touching in-flight swap page ({src} -> {dst})"
+        assert self.allocator.refcount(src) >= 1, \
+            f"cow from unallocated (or host-resident) page {src}"
         kops._record_dispatch("cow_page_copy")
         self.state = self._cow_jit(self.state, jnp.asarray(src, jnp.int32),
                                    jnp.asarray(dst, jnp.int32))
+
+    # ------------------------------------------------------------------
+    # host swap tier
+    # ------------------------------------------------------------------
+
+    def attach_host_pool(self, host_mb: float) -> HostSwapPool:
+        """Create the host swap tier under a `host_mb` MiB budget (page
+        capacity = budget // page_bytes; a budget smaller than one page
+        yields capacity 0, gracefully disabling swap-out)."""
+        self.host_pool = HostSwapPool(self.state["kv"],
+                                      int(host_mb * 2 ** 20))
+        return self.host_pool
+
+    def residency(self, rid: int) -> list[str]:
+        """Per-table-entry residency of `rid`: "device", "host", or
+        "in_flight" (the ledger view the tests and probes read)."""
+        out = []
+        for e in self.tables[rid]:
+            if isinstance(e, HostPageRef):
+                out.append("host")
+            elif e in self._inflight:
+                out.append("in_flight")
+            else:
+                out.append("device")
+        return out
+
+    def swap_eligible_pages(self, rid: int) -> list[int]:
+        """Device pages of `rid` that swap-out would move: exactly the
+        exclusively-held ones (refcount 1). Shared pages — radix-tree or
+        sibling references — keep the victim's retained ref and stay
+        device resident, so a shared page swaps at most once and a COW
+        source is never host resident."""
+        alloc = self.allocator
+        return [p for p in self.tables[rid]
+                if isinstance(p, int) and alloc.refcount(p) == 1]
+
+    def swap_out(self, rid: int) -> tuple[int, int]:
+        """Move `rid`'s exclusively-held pages to the host tier; returns
+        `(pages_moved, bytes_moved)`.
+
+        One fused gather dispatch (tallied `swap_out`) + one
+        `device_get` moves the whole set; the table entries become
+        `HostPageRef`s in place and the device copies are deref'd —
+        dropping the sole reference, so they scrub and return to the
+        allocator. Host slots are claimed *before* the transfer
+        (`MemoryError` on an over-budget tier mutates nothing)."""
+        if self.host_pool is None:
+            raise RuntimeError("no host swap pool attached")
+        table = self.tables[rid]
+        moved = [(i, p) for i, p in enumerate(table)
+                 if isinstance(p, int) and self.allocator.refcount(p) == 1]
+        if not moved:
+            return 0, 0
+        pages = [p for _, p in moved]
+        slots = self.host_pool.take(len(pages))
+        padded = _next_pow2(len(pages))
+        idx = jnp.asarray(pages + [SCRATCH_PAGE] * (padded - len(pages)),
+                          jnp.int32)
+        self._inflight.update(pages)
+        try:
+            kops._record_dispatch("swap_out")
+            blocks = jax.device_get(self._swap_gather_jit(self.state, idx))
+            self.host_pool.store(
+                slots, jax.tree.map(lambda a: a[:, :len(pages)], blocks))
+        finally:
+            self._inflight.difference_update(pages)
+        for (i, _), s in zip(moved, slots):
+            table[i] = HostPageRef(s)
+        self.deref(pages)
+        self.pages_swapped_out += len(pages)
+        return len(pages), len(pages) * self.page_bytes
+
+    def swap_in(self, rid: int,
+                alloc_fn: Callable[[int], list[int]] | None = None
+                ) -> tuple[int, int]:
+        """Restore `rid`'s host-resident pages to the device tier;
+        returns `(pages_moved, bytes_moved)`.
+
+        Fresh device pages are allocated first — through `alloc_fn` when
+        the caller has a smarter allocator (the scheduler's tree-evicting
+        one) — so a `MemoryError` leaves table, host tier, and allocator
+        untouched. One `device_put` + fused scatter dispatch (tallied
+        `swap_in`) writes the blocks back, the block-table row is patched
+        in place (bit-identical continuation: the pages hold the same
+        rows they held before swap-out), and the host slots are freed."""
+        table = self.tables[rid]
+        refs = [(i, e) for i, e in enumerate(table)
+                if isinstance(e, HostPageRef)]
+        if not refs:
+            return 0, 0
+        slots = [e.slot for _, e in refs]
+        new_pages = (alloc_fn or self.allocator.alloc)(len(refs))
+        pad = _next_pow2(len(new_pages)) - len(new_pages)
+        blocks = self.host_pool.load(slots)
+        if pad:
+            blocks = jax.tree.map(
+                lambda b: np.concatenate(
+                    [b, np.zeros((b.shape[0], pad) + b.shape[2:], b.dtype)],
+                    axis=1), blocks)
+        idx = jnp.asarray([p for p in new_pages]
+                          + [SCRATCH_PAGE] * pad, jnp.int32)
+        self._inflight.update(new_pages)
+        try:
+            kops._record_dispatch("swap_in")
+            self.state = self._swap_scatter_jit(
+                self.state, jax.device_put(blocks), idx)
+        finally:
+            self._inflight.difference_update(new_pages)
+        for (i, _), p in zip(refs, new_pages):
+            table[i] = p
+        self.host_pool.release(slots)
+        self.pages_swapped_in += len(refs)
+        return len(refs), len(refs) * self.page_bytes
 
     def page_of(self, rid: int, position: int) -> tuple[int, int]:
         """(page id, in-page offset) holding `position` of sequence `rid`."""
@@ -469,6 +760,10 @@ class PagedKVCache:
                 raise ValueError(
                     f"block table for sequence {r} holds {len(row)} pages "
                     f"but only {n_cols} columns were requested")
+            if any(not isinstance(p, int) for p in row):
+                raise ValueError(
+                    f"sequence {r} has host-resident pages; it must swap "
+                    f"in before any kernel dispatch")
         bt = [row + [SCRATCH_PAGE] * (n_cols - len(row)) for row in bt]
         return jnp.asarray(bt, jnp.int32)
 

@@ -59,6 +59,38 @@ replayed sampled continuation is bit-identical no matter how the
 interleaving changed. A request preempted more than `max_preemptions`
 times fails terminally (`failed="preempted..."`) instead of livelocking.
 
+**Swap-vs-replay cost rule.** With a host swap tier attached
+(`swap_host_mb`, kv-only specs), `_handle_exhaustion` chooses per
+victim: swap-out parks the victim's exclusively-held pages in host
+memory (round-trip bytes = `2 · pages · page_bytes`) while replay
+re-prefills `len(prompt + generated)` tokens — under the default
+`"cost"` policy the victim swaps when the bytes are no more than
+`swap_break_even_bytes_per_token` per replayed token (quantized int4
+KV pages shrink the byte side 4-8x, tipping long sequences toward
+swap), bounded by the host budget; `"always"`/`"never"` force either
+arm. A swapped victim waits in the queue like a replay (front
+insertion, exponential backoff, headroom waived) but re-admits by
+swapping its pages back in — block-table row patched in place, zero
+recomputed tokens, bit-identical continuation. Swap transfers can fail
+(injected `SwapFault` or a genuinely full allocator at swap-in): the
+engine retries with exponential backoff up to `swap_max_retries`, then
+degrades the request to recompute-by-replay (counted
+`engine.swap.fallbacks`, and from there the normal preemption bound
+applies). Swap-outs do NOT count against `max_preemptions` — the
+livelock bound protects against repeated *recompute* work, and a swap
+round-trip loses none.
+
+**Graceful degradation rails.** `drain()` stops admission (never-
+admitted queued requests terminate `cancelled`), finishes all in-flight
+work — including parked replays and swapped-out residents — then
+asserts balanced books and zero non-scratch residency on every tier.
+A non-finite max-logit in any fused sampling dispatch (a poisoned
+adapter output: NaN/Inf) terminates only the poisoned rows with
+`outcome="failed"` (counter `engine.requests.poisoned`) instead of
+sampling garbage into the stream; and a raising `on_token` callback is
+caught per-callback (`engine.stream.callback_errors`), dropped, and
+never blocks delivery to other streams.
+
 **Stall detection.** If nothing is active and an admission-eligible
 request still cannot be admitted, no future step can make progress; the
 scheduler raises `EngineStalledError` naming who is blocked and on how
@@ -90,7 +122,7 @@ from repro.serve.telemetry.quality import QualityProbes
 from repro.serve.telemetry.trace import PID_REQUESTS, Tracer
 
 from .adapter import ServableModel
-from .faults import DispatchFault, FaultPlan
+from .faults import DispatchFault, FaultPlan, SwapFault
 from .pages import PagedKVCache, pages_for
 from .radix import RadixCache
 
@@ -188,6 +220,9 @@ class EngineRequest:
     n_preempted: int = 0       # times this request lost its pages
     admit_seq: int = -1        # monotonic admission order (victim pick)
     not_before_step: int = 0   # replay backoff: earliest re-admission step
+    swapped: bool = False      # pages parked in the host tier (queued)
+    n_swapped: int = 0         # times this request swapped out
+    swap_retries: int = 0      # failed swap-in attempts since swap-out
     t_submit: float | None = None   # perf_counter at submit (telemetry)
     t_admit: float | None = None    # perf_counter at admission
 
@@ -228,12 +263,19 @@ class ServeEngine:
                  deadline_s: float | None = None,
                  prefix_cache: bool = False,
                  prefix_cache_pages: int | None = None,
+                 swap_host_mb: float | None = None,
+                 swap_policy: str = "cost",
+                 swap_max_retries: int = 3,
+                 swap_break_even_bytes_per_token: float = 4096.0,
                  faults: FaultPlan | None = None,
                  tracer: Tracer | None = None,
                  quality_probes: QualityProbes | None = None):
         if admission not in ("optimistic", "reserve"):
             raise ValueError(f"admission must be 'optimistic' or 'reserve', "
                              f"got {admission!r}")
+        if swap_policy not in ("never", "cost", "always"):
+            raise ValueError(f"swap_policy must be 'never', 'cost', or "
+                             f"'always', got {swap_policy!r}")
         self.adapter = adapter
         self.spec = adapter.state_spec
         self.max_seqs = max_seqs
@@ -271,6 +313,21 @@ class ServeEngine:
                 "serve this spec")
         self.prefix_cache = RadixCache(self.kv, prefix_cache_pages) \
             if prefix_cache else None
+        # host swap tier: a byte budget for parking preemption victims'
+        # KV pages instead of recomputing them (kv-only specs — register
+        # state is fixed-size slot-resident and never paged out)
+        self.swap_policy = swap_policy if swap_host_mb else "never"
+        self.swap_max_retries = swap_max_retries
+        self.swap_break_even_bytes_per_token = swap_break_even_bytes_per_token
+        if swap_host_mb and swap_policy != "never":
+            if self.spec.register:
+                raise ValueError(
+                    f"adapter {adapter.name!r} carries register state: "
+                    "fixed-size SSM slots are not paged, so the host swap "
+                    "tier cannot serve this spec (recompute-by-replay "
+                    "still covers it)")
+            self.kv.attach_host_pool(swap_host_mb)
+        self._draining = False
         self.queue: list[EngineRequest] = []
         self._callbacks: dict[int, Any] = {}   # rid → on_token streaming cb
         self.prefilling: list[EngineRequest] = []
@@ -319,6 +376,9 @@ class ServeEngine:
         never perturb engine state mid-phase. Replays never re-deliver: a
         preempted request resumes streaming where it left off (its
         recomputed tokens are bit-identical, so nothing is retracted)."""
+        if self._draining:
+            raise RuntimeError(
+                "engine is draining: new requests are not accepted")
         if not req.prompt:
             raise ValueError("empty prompt")
         if req.sampling.max_new < 1:
@@ -381,6 +441,12 @@ class ServeEngine:
         `"optimistic"` (growth is backed by preemption)."""
         if not self.spec.kv:
             return 0
+        if req.swapped:
+            # a swapped-out request re-admits by allocating device pages
+            # for exactly its host-resident entries — its retained shared
+            # pages never left the device and are already committed
+            return sum(1 for e in self.kv.tables[req.rid]
+                       if not isinstance(e, int))
         if self.admission == "reserve":
             return pages_for(len(req.prompt) + req.sampling.max_new,
                              self.kv.page_size)
@@ -396,11 +462,34 @@ class ServeEngine:
                 continue
             need = self._pages_needed(req)
             headroom = self.headroom_pages \
-                if self.admission == "optimistic" and not req.n_preempted \
-                else 0
+                if self.admission == "optimistic" \
+                and not (req.n_preempted or req.swapped) else 0
             if self._committed_total + need + headroom > cap:
                 self.metrics.counter("engine.admission.blocked").inc()
                 return           # head-of-line blocks until pages free up
+            if req.swapped:
+                if not self._try_swap_in(req):
+                    # retry scheduled (backoff), degraded to replay, or
+                    # terminally failed — either way queue[i] now either
+                    # skips on not_before_step or is a different request
+                    continue
+                self.queue.remove(req)
+                req.admit_seq = self._admit_seq
+                self._admit_seq += 1
+                # a mid-prefill victim resumes prefill at its preserved
+                # n_cached; a decode victim rejoins the batched decode
+                # (its sampled-but-uncached next_token rides along)
+                phase = "decode" if req.next_token is not None \
+                    else "prefill"
+                (self.decoding if phase == "decode"
+                 else self.prefilling).append(req)
+                self.metrics.counter("engine.requests.admitted").inc()
+                if self.tracer:
+                    self.tracer.end("queued", pid=PID_REQUESTS, tid=req.rid)
+                    self.tracer.instant("swapped_in", pid=PID_REQUESTS,
+                                        tid=req.rid)
+                    self.tracer.begin(phase, pid=PID_REQUESTS, tid=req.rid)
+                continue
             self.queue.pop(i)
             self.kv.open(req.rid)     # before committing: if this raises,
             self._committed[req.rid] = need   # no reservation leaks
@@ -549,6 +638,11 @@ class ServeEngine:
         phase = self._phase_of(req)
         if phase == "queued":
             self.queue.remove(req)
+            if req.swapped:
+                # a swapped-out request parked in the queue still holds
+                # host slots and (possibly) retained shared device pages
+                self._release(req)
+                req.swapped = False
         else:
             (self.prefilling if phase == "prefill"
              else self.decoding).remove(req)
@@ -644,6 +738,130 @@ class ServeEngine:
                 self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
             self.queue.insert(0, req)
 
+    def _should_swap(self, victim: EngineRequest) -> bool:
+        """The swap-vs-replay cost rule: park the victim's exclusive
+        pages in the host tier when (a) a tier exists with room for
+        them, (b) there is anything exclusive to move at all (a victim
+        whose pages are all radix-shared frees nothing by swapping), and
+        (c) the policy's byte-vs-token arithmetic favors it: round-trip
+        bytes (out now, in at re-admission) vs the tokens a replay would
+        re-prefill, scaled by the configured break-even traffic per
+        recomputed token. Quantized int4/int8 KV pages shrink the byte
+        side 4-8x — exactly what tips long sequences toward swap."""
+        host = self.kv.host_pool
+        if host is None or self.swap_policy == "never":
+            return False
+        pages = self.kv.swap_eligible_pages(victim.rid)
+        if not pages or len(pages) > host.n_free:
+            return False
+        if self.swap_policy == "always":
+            return True
+        move_bytes = 2 * len(pages) * self.kv.page_bytes
+        replay_tokens = len(self._stream(victim))
+        return move_bytes \
+            <= replay_tokens * self.swap_break_even_bytes_per_token
+
+    def _swap_out(self, req: EngineRequest):
+        """Swap the victim's exclusive pages to the host tier instead of
+        scrubbing them: the device copies free for the starving grower,
+        and the victim re-queues at the front — like a replay, but its
+        re-admission is a swap-in (zero recomputed tokens) rather than a
+        re-prefill. Raises `SwapFault` (injected) before any mutation,
+        letting `_handle_exhaustion` fall back to the replay arm.
+        Swap-outs do not count against `max_preemptions`: that bound
+        protects against repeated recompute work, and a swap round-trip
+        loses none."""
+        if self.faults is not None \
+                and self.faults.take_swap_fault(self._step_index):
+            raise SwapFault(
+                f"injected swap-out failure at step {self._step_index}")
+        phase = self._phase_of(req)
+        n, nbytes = self.kv.swap_out(req.rid)
+        (self.prefilling if phase == "prefill"
+         else self.decoding).remove(req)
+        m = self.metrics
+        m.counter("engine.swap.out").inc()
+        m.counter("engine.swap.bytes").inc(nbytes)
+        # commitment shrinks to what stays device-resident (the retained
+        # shared pages); the host-resident entries re-commit at swap-in
+        held = sum(1 for e in self.kv.tables[req.rid]
+                   if isinstance(e, int))
+        cur = self._committed[req.rid]
+        self._committed[req.rid] = held
+        self._committed_total += held - cur
+        req.swapped = True
+        req.n_swapped += 1
+        req.swap_retries = 0
+        req.not_before_step = \
+            self._step_index + 2 ** min(req.n_swapped - 1, 5)
+        if self.tracer:
+            self.tracer.end(phase, pid=PID_REQUESTS, tid=req.rid)
+            self.tracer.instant("swapped_out", pid=PID_REQUESTS,
+                                tid=req.rid,
+                                args={"pages": n, "bytes": nbytes})
+            self.tracer.begin("queued", pid=PID_REQUESTS, tid=req.rid)
+        self.queue.insert(0, req)
+
+    def _try_swap_in(self, req: EngineRequest) -> bool:
+        """Re-admission transfer for a swapped-out request: allocate
+        device pages (evicting cached prefixes under pressure), copy the
+        host pages back, patch the block table in place. On an injected
+        `SwapFault` or a genuine allocation failure the attempt retries
+        with exponential backoff up to `swap_max_retries`, then degrades
+        to recompute-by-replay."""
+        m = self.metrics
+        try:
+            if self.faults is not None \
+                    and self.faults.take_swap_fault(self._step_index):
+                raise SwapFault(
+                    f"injected swap-in failure at step {self._step_index}")
+            n, nbytes = self.kv.swap_in(req.rid, self._alloc_pages)
+        except (SwapFault, MemoryError) as e:
+            req.swap_retries += 1
+            if req.swap_retries > self.swap_max_retries:
+                self._fallback_to_replay(req, why=str(e))
+            else:
+                m.counter("engine.swap.retries").inc()
+                req.not_before_step = \
+                    self._step_index + 2 ** (req.swap_retries - 1)
+            return False
+        m.counter("engine.swap.in").inc()
+        m.counter("engine.swap.bytes").inc(nbytes)
+        held = len(self.kv.tables[req.rid])
+        cur = self._committed[req.rid]
+        self._committed[req.rid] = held
+        self._committed_total += held - cur
+        req.swapped = False
+        req.swap_retries = 0
+        return True
+
+    def _fallback_to_replay(self, req: EngineRequest, *, why: str):
+        """Degrade a swapped-out queued request to PR 8 recompute-by-
+        replay: drop its host copy and residual device references, reset
+        the cached state, and let the normal replay admission path
+        re-prefill it — bounded by `max_preemptions` like any
+        preemption (the recompute bound applies the moment recompute
+        work actually becomes necessary)."""
+        m = self.metrics
+        m.counter("engine.swap.fallbacks").inc()
+        self._release(req)
+        req.swapped = False
+        req.swap_retries = 0
+        req.n_cached = 0
+        req.next_token = None
+        req.n_preempted += 1
+        m.counter("engine.preemptions").inc()
+        if self.tracer:
+            self.tracer.instant("swap_fallback", pid=PID_REQUESTS,
+                                tid=req.rid, args={"why": why})
+        if req.n_preempted > self.max_preemptions:
+            req.failed = (f"swap-in abandoned ({why}); preempted "
+                          f"{req.n_preempted} times "
+                          f"(max_preemptions={self.max_preemptions})")
+            self._terminate(req, "failed")
+        else:
+            req.not_before_step = self._step_index + 1
+
     def _reclaim(self):
         """Page pressure ladder: cached prefixes are speculative capacity,
         live sequences are real work — evict from the radix tree first
@@ -655,11 +873,24 @@ class ServeEngine:
         self._handle_exhaustion()
 
     def _handle_exhaustion(self):
-        """The page pool exhausted mid-growth: preempt the best victim —
+        """The page pool exhausted mid-growth: pick the best victim —
         fewest generated tokens (least work lost), latest-admitted
-        breaking ties — among active requests that actually hold pages."""
+        breaking ties — among active requests that actually hold pages,
+        then either swap its exclusive pages to the host tier (when the
+        cost rule says the bytes beat the replay) or preempt it for
+        recompute-by-replay. An injected swap fault falls back to the
+        replay arm for the same victim."""
         holders = [r for r in self.active if self.kv.tables.get(r.rid)]
         if not holders:
+            # every held page belongs to swapped-out queue entries
+            # (retained shared pages) — or the books really are broken:
+            # degrade one swapped request to a full replay, freeing its
+            # residual references, and let the grower retry
+            for r in self.queue:
+                if r.swapped:
+                    self._fallback_to_replay(
+                        r, why="page pool exhausted with no active holder")
+                    return
             alloc = self.kv.allocator
             raise EngineStalledError(
                 "page pool exhausted but no active request holds pages — "
@@ -667,6 +898,12 @@ class ServeEngine:
                 f"free {alloc.n_free}, committed {self._committed_total})")
         victim = min(holders,
                      key=lambda r: (len(r.generated), -r.admit_seq))
+        if self._should_swap(victim):
+            try:
+                self._swap_out(victim)
+                return
+            except SwapFault:
+                self.metrics.counter("engine.swap.fallbacks").inc()
         self._preempt(victim)
 
     def _check_stalled(self):
@@ -733,7 +970,11 @@ class ServeEngine:
                      "engine.prefix.hits", "engine.prefix.misses",
                      "engine.prefix.hit_tokens", "engine.prefix.cow_copies",
                      "engine.prefix.inserted_pages",
-                     "engine.prefix.evicted_pages"):
+                     "engine.prefix.evicted_pages",
+                     "engine.swap.out", "engine.swap.in",
+                     "engine.swap.bytes", "engine.swap.retries",
+                     "engine.swap.fallbacks", "engine.requests.poisoned",
+                     "engine.stream.callback_errors"):
             m.counter(name)
         for name in ("engine.step.wall_s", "engine.step.budget_utilization",
                      "engine.decode.batch_occupancy",
@@ -776,6 +1017,16 @@ class ServeEngine:
                 c = m.counter(name)
                 if n > c.value:
                     c.value = n
+        # host-tier occupancy: always emitted (zeros when no pool) so the
+        # snapshot shape is policy-independent
+        hp = self.kv.host_pool
+        pb = self.kv.page_bytes
+        m.gauge("engine.swap.host_pages").set(hp.in_use if hp else 0)
+        m.gauge("engine.swap.host_pages_capacity").set(
+            hp.capacity if hp else 0)
+        m.gauge("engine.swap.host_bytes").set(hp.in_use * pb if hp else 0)
+        m.gauge("engine.swap.host_budget_bytes").set(
+            hp.capacity * pb if hp else 0)
         regs = self.kv.registers
         if regs is not None:
             m.gauge("engine.register_slots.capacity").set(regs.capacity)
@@ -829,8 +1080,29 @@ class ServeEngine:
         assert self._committed_total == sum(self._committed.values()), \
             (self._committed_total, self._committed)
         active = {r.rid for r in self.active}
-        assert set(self._committed) == active == set(self.kv.tables), \
-            (set(self._committed), active, set(self.kv.tables))
+        swapped = {r.rid for r in self.queue if r.swapped}
+        assert not (active & swapped), (active, swapped)
+        assert set(self._committed) == active | swapped \
+            == set(self.kv.tables), \
+            (set(self._committed), active, swapped, set(self.kv.tables))
+        # a swapped rid's commitment covers exactly its device-resident
+        # (retained shared) entries — host residency is not pool demand
+        for r in self.queue:
+            if r.swapped:
+                assert self._committed[r.rid] == sum(
+                    1 for e in self.kv.tables[r.rid] if isinstance(e, int))
+        # quiescent between ops: no page may be stuck mid-transfer
+        assert not self.kv._inflight, self.kv._inflight
+        # host-tier books: slots in use == host-resident table entries,
+        # each referenced exactly once (host pages are never shared)
+        host_refs = [e.slot for t in self.kv.tables.values()
+                     for e in t if not isinstance(e, int)]
+        hp = self.kv.host_pool
+        if hp is not None:
+            assert hp.in_use == len(host_refs) == len(set(host_refs)), \
+                (hp.in_use, host_refs)
+        else:
+            assert not host_refs, host_refs
         alloc = self.kv.allocator
         # sharing-aware: a page may appear in several tables *and* the
         # radix tree, but occupies the pool once — and its refcount must
@@ -838,7 +1110,8 @@ class ServeEngine:
         counts: dict[int, int] = {}
         for t in self.kv.tables.values():
             for p in t:
-                counts[p] = counts.get(p, 0) + 1
+                if isinstance(p, int):
+                    counts[p] = counts.get(p, 0) + 1
         if self.prefix_cache is not None:
             tree_pages = self.prefix_cache.held_pages()
             assert len(tree_pages) == self.prefix_cache.n_pages, \
@@ -959,9 +1232,13 @@ class ServeEngine:
         keys = _row_keys(base, rids, lens)
         toks = _sample_tokens(keys, lg, temps, top_ks, top_ps,
                               filtered=filtered)
+        # per-row max logit: the host-side non-finite sentinel reads it
+        # to flag poisoned rows (NaN/Inf adapter output) without pulling
+        # the full logits matrix off device
+        mx = jnp.max(lg, axis=-1)
         if probe:
-            return state, lg, toks, stats
-        return state, lg, toks
+            return state, lg, toks, mx, stats
+        return state, lg, toks, mx
 
     def _decode_once(self) -> list[EngineRequest]:
         batch = self.decoding
@@ -1010,9 +1287,9 @@ class ServeEngine:
             self.kv.state, self.adapter.params, self._base_key, bt, reg,
             tokens, fill, lens, rid_rows, temps, top_ks, top_ps)
         if probe:
-            self.kv.state, logits, toks, stats = out
+            self.kv.state, logits, toks, mx, stats = out
         else:
-            (self.kv.state, logits, toks), stats = out, None
+            (self.kv.state, logits, toks, mx), stats = out, None
         if tr:
             jax.block_until_ready((self.kv.state, toks))
             tr.complete("dispatch.decode", ts0, tr.ts() - ts0,
@@ -1020,8 +1297,18 @@ class ServeEngine:
         if stats is not None:
             self.quality_probes.record(stats)
         toks = np.asarray(toks)
+        finite = np.isfinite(np.asarray(mx))
         finished = []
         for i, req in enumerate(list(batch)):
+            if not finite[i]:
+                # poisoned adapter output (NaN/Inf logits): terminate
+                # only this row — its sampled token is garbage and must
+                # not enter the stream; other rows are independent
+                req.failed = (f"non-finite logits at stream position "
+                              f"{req.n_cached} (poisoned model output)")
+                m.counter("engine.requests.poisoned").inc()
+                self._terminate(req, "failed")   # returned via _terminal
+                continue
             req.n_cached += 1
             req.generated.append(int(toks[i]))
             req.next_token = int(toks[i])
@@ -1061,8 +1348,10 @@ class ServeEngine:
                                           keepdims=False)[0]
         lg = lg.astype(jnp.float32)
         keys = _row_keys(base, rids, lens)
-        return state, lg, _sample_tokens(keys, lg[None], temp, top_k,
-                                         top_p, filtered=filtered)[0]
+        tok = _sample_tokens(keys, lg[None], temp, top_k, top_p,
+                             filtered=filtered)[0]
+        # max logit of the sampled row, for the non-finite sentinel
+        return state, lg, tok, jnp.max(lg)
 
     def _prefill_once(self, budget: int) -> tuple[int, list[EngineRequest]]:
         """Advance the head-of-line prefill by up to `budget` tokens of
@@ -1102,7 +1391,7 @@ class ServeEngine:
         filtered = self._wants_filtering([req])
         tr = self.tracer
         ts0 = tr.ts() if tr else 0.0
-        self.kv.state, last, tok = self._fused(
+        self.kv.state, last, tok, mx = self._fused(
             "prefill",
             functools.partial(self._prefill_impl, filtered=filtered),
             variant=filtered)(
@@ -1119,6 +1408,16 @@ class ServeEngine:
             tr.complete("dispatch.prefill", ts0, tr.ts() - ts0,
                         args={"rid": req.rid, "tokens": real,
                               "padded": padded})
+        if not np.isfinite(float(mx)):
+            # poisoned adapter output mid-prefill: the chunk's logits are
+            # garbage, so the request cannot continue — terminate it
+            # alone (the single-sequence dispatch touched no other state)
+            req.failed = (f"non-finite logits in prefill at stream "
+                          f"position {start + real - 1} "
+                          f"(poisoned model output)")
+            m.counter("engine.requests.poisoned").inc()
+            self._terminate(req, "failed")
+            return real, []
 
         req.n_cached = start + real
         m.counter("engine.prefill_tokens").inc(real)
@@ -1217,7 +1516,10 @@ class ServeEngine:
         all device work and bookkeeping for the step, so callbacks
         observe a consistent engine and cannot perturb the step that
         produced their tokens. Terminal requests' callbacks are dropped
-        after their final flush."""
+        after their final flush. A *raising* callback is caught per
+        callback — counted (`engine.stream.callback_errors`) and dropped
+        so one broken consumer can never abort delivery to the other
+        streams or propagate out of `step()` after bookkeeping."""
         if not self._callbacks:
             return
         for req in self.active + finished:
@@ -1227,7 +1529,13 @@ class ServeEngine:
             while req.n_streamed < len(req.generated):
                 tok = req.generated[req.n_streamed]
                 req.n_streamed += 1
-                cb(req.rid, tok)
+                try:
+                    cb(req.rid, tok)
+                except Exception:
+                    self.metrics.counter(
+                        "engine.stream.callback_errors").inc()
+                    self._callbacks.pop(req.rid, None)
+                    break
         for req in finished:
             self._callbacks.pop(req.rid, None)
 
@@ -1238,4 +1546,42 @@ class ServeEngine:
         done.extend(self._terminal)   # cancels issued between steps
         self._terminal.clear()
         self._flush_streams(done)
+        return done
+
+    def drain(self) -> list[EngineRequest]:
+        """Graceful shutdown: stop admitting — queued requests that were
+        never admitted terminate `cancelled` — finish every piece of
+        in-flight work (active sequences, parked replays, swapped-out
+        residents: all of it represents admitted work the engine owes an
+        answer for), then assert balanced books and zero non-scratch
+        residency on every tier. Returns the requests that reached a
+        terminal state during the drain. The engine stays draining
+        afterwards: further `submit()` calls are rejected."""
+        self._draining = True
+        for req in list(self.queue):
+            if req.t_admit is None:
+                # never admitted — no partial work to honor
+                self.cancel(req.rid)
+        done = []
+        while self.queue or self.active:
+            done.extend(self.step())
+        done.extend(self._terminal)
+        self._terminal.clear()
+        self._flush_streams(done)
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
+        self.check_books()
+        alloc = self.kv.allocator
+        assert alloc.in_use == 0 and alloc.n_free == alloc.capacity, \
+            f"device pages leaked: {alloc.in_use} still in use"
+        assert not self.kv.tables and not self.kv.slots, \
+            (self.kv.tables, self.kv.slots)
+        assert not self._committed and self._committed_total == 0, \
+            (self._committed, self._committed_total)
+        hp = self.kv.host_pool
+        assert hp is None or hp.in_use == 0, \
+            f"host tier leaked: {hp.in_use} slots still in use"
+        regs = self.kv.registers
+        assert regs is None or regs.in_use == 0, \
+            f"register slots leaked: {regs.in_use} still in use"
         return done

@@ -34,7 +34,10 @@ import math
 # replayed prefill tokens, dispatch-fault tally, live/peak utilization
 # v3: prefix-sharing taxonomy — radix-cache hit/miss/hit-token/COW/
 # insert/evict counters, tree-size and shared-page gauges
-SCHEMA_VERSION = 3
+# v4: tiered-paging taxonomy — host-swap traffic counters
+# (out/in/bytes/retries/fallbacks) + host-tier occupancy gauges, plus
+# the poisoned-request and stream-callback-error degradation counters
+SCHEMA_VERSION = 4
 
 
 class Counter:

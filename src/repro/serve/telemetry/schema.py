@@ -45,6 +45,13 @@ REQUIRED_COUNTERS = (
     "engine.prefix.cow_copies",
     "engine.prefix.inserted_pages",
     "engine.prefix.evicted_pages",
+    "engine.swap.out",
+    "engine.swap.in",
+    "engine.swap.bytes",
+    "engine.swap.retries",
+    "engine.swap.fallbacks",
+    "engine.requests.poisoned",
+    "engine.stream.callback_errors",
 )
 
 REQUIRED_GAUGES = (
@@ -61,6 +68,12 @@ REQUIRED_GAUGES = (
     "engine.pages.shared",
     "engine.prefix.tree_pages",
     "engine.prefix.tree_nodes",
+    # host swap tier: zeros when no pool is attached (always emitted so
+    # the snapshot shape is policy-independent)
+    "engine.swap.host_pages",
+    "engine.swap.host_pages_capacity",
+    "engine.swap.host_bytes",
+    "engine.swap.host_budget_bytes",
 )
 
 REQUIRED_HISTOGRAMS = (

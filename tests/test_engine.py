@@ -517,6 +517,104 @@ def test_on_token_streams_at_step_boundaries(stack):
         assert len(streamed[rid]) == MAX_NEW
 
 
+class _PoisonAdapter:
+    """Delegating adapter that returns NaN logits for any row whose true
+    context length equals `poison_len` — a deterministic stand-in for
+    numerically-poisoned model output (overflowed activation, corrupted
+    weight). Everything else passes straight through to the inner
+    adapter, so other rows of the same fused dispatch are untouched."""
+
+    def __init__(self, inner, poison_len):
+        self._inner = inner
+        self._poison_len = poison_len
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def forward_chunk(self, params, tokens, state, pos, bt=None, lens=None,
+                      reg=None, **kw):
+        out = self._inner.forward_chunk(params, tokens, state, pos, bt,
+                                        lens, reg, **kw)
+        logits = jnp.where((lens == self._poison_len)[:, None, None],
+                           jnp.nan, out[0])
+        return (logits,) + tuple(out[1:])
+
+
+def test_poisoned_row_fails_without_perturbing_batch(stack):
+    """Satellite: a non-finite logits row terminates exactly that request
+    (`outcome="failed"`, counted `engine.requests.poisoned`) instead of
+    entering a garbage token into its stream or crashing the step; the
+    other rows of the same fused dispatches stay bit-identical."""
+    adapter = _adapter(stack, "bf16")
+    _, base = _engine_run(adapter, PROMPTS, max_new=5)
+    # decode lens = n_cached + 1, so rid 2 (prompt 7) spans 8..11 while
+    # rid 0 (prompt 5) tops out at 9 and rid 1 (prompt 3) at 7 — length
+    # 10 poisons exactly rid 2's 4th-generated-token dispatch, mid-decode
+    eng, done = _engine_run(_PoisonAdapter(adapter, poison_len=10),
+                            PROMPTS, max_new=5)
+    assert done[2].outcome == "failed"
+    assert "non-finite logits" in done[2].failed
+    # tokens generated before the poison are the baseline's, and the
+    # poisoned sample itself never entered the stream
+    assert done[2].generated == base[2].generated[:3]
+    assert eng.metrics.counter("engine.requests.poisoned").value == 1
+    assert eng.metrics.counter("engine.requests.failed").value == 1
+    for rid in (0, 1):
+        assert done[rid].outcome == "length"
+        assert done[rid].generated == base[rid].generated, rid
+
+
+def test_drain_finishes_inflight_rejects_new(stack):
+    """Satellite: drain() stops admission (never-admitted queue entries
+    cancel), finishes all in-flight work, asserts every pool empty, and
+    rejects subsequent submits."""
+    adapter = _adapter(stack, "bf16")
+    _, base = _engine_run(adapter, PROMPTS)
+    eng = ServeEngine(adapter, n_pages=33, page_size=8, max_seqs=2,
+                      prefill_chunk=4)
+    for rid, p in enumerate(PROMPTS):
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)))
+    done = eng.step()                 # rid 0/1 admitted; rid 2 queued
+    done += eng.drain()
+    by_rid = {r.rid: r for r in done}
+    assert len(by_rid) == len(PROMPTS)
+    assert by_rid[2].outcome == "cancelled" and not by_rid[2].generated
+    for rid in (0, 1):
+        assert by_rid[rid].outcome == "length"
+        assert by_rid[rid].generated == base[rid].generated
+    with pytest.raises(RuntimeError, match="draining"):
+        eng.submit(EngineRequest(rid=9, prompt=[1],
+                                 sampling=SamplingParams(max_new=1)))
+
+
+def test_stream_callback_error_isolated(stack):
+    """Satellite: a raising on_token callback is counted and dropped —
+    it cannot abort the step or starve the other streams, which still
+    deliver every token exactly once."""
+    adapter = _adapter(stack, "bf16")
+    eng = ServeEngine(adapter, n_pages=33, page_size=8, max_seqs=2,
+                      prefill_chunk=4)
+    got: list[int] = []
+
+    def bad(rid, tok):
+        raise RuntimeError("consumer died")
+
+    for rid, p in enumerate(PROMPTS):
+        cb = {0: bad, 1: lambda r, t: got.append(t)}.get(rid)
+        eng.submit(EngineRequest(rid=rid, prompt=list(p),
+                                 sampling=SamplingParams(max_new=MAX_NEW)),
+                   on_token=cb)
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == len(PROMPTS)
+    assert all(r.outcome == "length" for r in done.values())
+    # the broken consumer was dropped after its first raise
+    assert eng.metrics.counter("engine.stream.callback_errors").value == 1
+    assert 0 not in eng._callbacks
+    # the healthy stream delivered everything exactly once, in order
+    assert got == done[1].generated
+
+
 def test_release_scrubs_in_one_fused_dispatch(stack):
     """Satellite: each request release batches its scrub into exactly ONE
     fused dispatch (tallied as `scrub_state` in the kernels.ops counts),
